@@ -1,0 +1,94 @@
+"""Shared benchmark harness: datasets, trainers, timing, modeled-TPU columns.
+
+CPU-only caveat (DESIGN.md §8): wall-clock here measures XLA-CPU, so every
+table reports (i) measured CPU wall time, (ii) exact communication bytes
+(independent of hardware), and (iii) modeled TPU comm time = bytes / ICI_BW.
+The paper's claims are validated against (ii)/(iii) and the accuracy columns.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.sylvie import SylvieConfig
+from repro.graph import formats, partition, synthetic
+from repro.launch.mesh import ICI_BW
+from repro.models.gnn.models import GAT, GCN, GraphSAGE
+from repro.train.trainer import GNNTrainer
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "bench"
+
+# Stand-ins for the paper's datasets (offline container -> synthetic graphs
+# with comparable structure; see graph/synthetic.py).
+DATASETS = {
+    "planted-sm": dict(name="planted", kw=dict(n_nodes=1200, d_feat=64,
+                                               avg_degree=10)),
+    "powerlaw-md": dict(name="powerlaw", kw=dict(n_nodes=4000, d_feat=96,
+                                                 avg_degree=16)),
+}
+
+MODELS = {
+    "gcn": lambda d_in, d_out: GCN(d_in, 64, d_out, n_layers=2),
+    "graphsage": lambda d_in, d_out: GraphSAGE(d_in, 64, d_out, n_layers=2),
+    "gat": lambda d_in, d_out: GAT(d_in, 16, d_out, n_layers=2, heads=4),
+}
+
+# The six methods of Table 2, expressed as runtime configs of THIS framework.
+METHODS = {
+    "vanilla(DGL)": dict(mode="vanilla", bits=32),
+    "PipeGCN~": dict(mode="async", bits=32),
+    "BNS-GCN~": dict(mode="vanilla", bits=32, boundary_sample_p=0.9),
+    "Sylvie-S": dict(mode="sync", bits=1),
+    "Sylvie-A": dict(mode="async", bits=1),
+}
+
+
+def build_dataset(ds: str):
+    spec = DATASETS[ds]
+    g = synthetic.by_name(spec["name"], **spec["kw"])
+    ei = formats.add_self_loops(g.edge_index, g.n_nodes)
+    ew = formats.gcn_edge_weights(ei, g.n_nodes)
+    return formats.Graph(g.n_nodes, ei, g.x, g.y, g.train_mask, g.val_mask,
+                         g.test_mask, n_classes=g.n_classes), ew
+
+
+def make_trainer(ds: str, model_name: str, parts: int = 8, eps_s=None,
+                 seed: int = 0, **cfg_kw) -> GNNTrainer:
+    g, ew = build_dataset(ds)
+    pg = partition.partition_graph(g, parts, edge_weight=ew)
+    model = MODELS[model_name](g.x.shape[1], g.n_classes)
+    return GNNTrainer(model, pg, SylvieConfig(**cfg_kw), eps_s=eps_s,
+                      seed=seed)
+
+
+def timed_epochs(tr: GNNTrainer, epochs: int, warmup: int = 3):
+    for _ in range(warmup):
+        tr.train_epoch()
+    t0 = time.time()
+    for _ in range(epochs):
+        tr.train_epoch()
+    return (time.time() - t0) / epochs
+
+
+def modeled_comm_s(tr: GNNTrainer) -> float:
+    pb, eb = tr.comm_bytes_per_epoch()
+    return (pb + eb) / ICI_BW
+
+
+def save(name: str, record: dict):
+    ART.mkdir(parents=True, exist_ok=True)
+    (ART / f"{name}.json").write_text(json.dumps(record, indent=1,
+                                                 default=float))
+
+
+def fmt_table(headers, rows) -> str:
+    w = [max(len(str(h)), *(len(str(r[i])) for r in rows))
+         for i, h in enumerate(headers)]
+    out = ["  ".join(str(h).ljust(w[i]) for i, h in enumerate(headers))]
+    out.append("  ".join("-" * w[i] for i in range(len(headers))))
+    for r in rows:
+        out.append("  ".join(str(c).ljust(w[i]) for i, c in enumerate(r)))
+    return "\n".join(out)

@@ -1,0 +1,46 @@
+"""Fig. 2: epoch time breakdown of vanilla distributed GNN training.
+
+Shows communication dominating the epoch (the paper profiles up to 89% on
+8 GPUs). Columns: exact bytes moved, modeled TPU comm time (bytes / ICI_BW),
+modeled compute time (analytic FLOPs / peak), comm fraction.
+"""
+from __future__ import annotations
+
+from repro.launch.cells import _gnn_model_flops
+from repro.launch.mesh import ICI_BW, PEAK_FLOPS_BF16
+
+from . import common
+
+
+def run() -> dict:
+    rows = []
+    rec = {}
+    for ds in common.DATASETS:
+        for model_name in ("graphsage", "gcn"):
+            tr = common.make_trainer(ds, model_name, parts=8,
+                                     mode="vanilla", bits=32)
+            pb, eb = tr.comm_bytes_per_epoch()
+            comm_s = (pb + eb) / ICI_BW
+            g, _ = common.build_dataset(ds)
+            flops = _gnn_model_flops(model_name, tr.model, g.n_nodes,
+                                     g.n_edges, g.x.shape[1], True) / 8
+            comp_s = flops / PEAK_FLOPS_BF16
+            frac = comm_s / (comm_s + comp_s)
+            cpu_s = common.timed_epochs(tr, epochs=5)
+            rows.append([ds, model_name, f"{pb/1e6:.1f}",
+                         f"{comm_s*1e6:.1f}", f"{comp_s*1e6:.1f}",
+                         f"{100*frac:.1f}%", f"{cpu_s*1e3:.1f}"])
+            rec[f"{ds}/{model_name}"] = dict(payload_mb=pb / 1e6,
+                                             comm_frac=frac)
+    print("\n== Fig 2: vanilla epoch breakdown (8 partitions) ==")
+    print(common.fmt_table(
+        ["dataset", "model", "comm MB", "comm us (TPU)", "compute us (TPU)",
+         "comm frac", "CPU ms/epoch"], rows))
+    common.save("fig2_breakdown", rec)
+    # the paper's observation: comm dominates
+    assert all(v["comm_frac"] > 0.5 for v in rec.values())
+    return rec
+
+
+if __name__ == "__main__":
+    run()

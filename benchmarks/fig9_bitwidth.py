@@ -1,0 +1,36 @@
+"""Fig. 9: bit-width sweep — comm volume, modeled epoch time, accuracy."""
+from __future__ import annotations
+
+from repro.launch.mesh import ICI_BW
+
+from . import common
+
+EPOCHS = 40
+BITS = (32, 16, 8, 4, 2, 1)
+
+
+def run() -> dict:
+    rows = []
+    rec = {}
+    for bits in BITS:
+        mode = "vanilla" if bits == 32 else "sync"
+        tr = common.make_trainer("planted-sm", "graphsage", parts=8,
+                                 mode=mode, bits=bits)
+        tr.fit(EPOCHS)
+        acc = tr.evaluate("test")
+        pb, eb = tr.comm_bytes_per_epoch()
+        comm_s = (pb + eb) / ICI_BW
+        rows.append([bits, f"{pb/1e6:.2f}", f"{eb/1e6:.3f}",
+                     f"{comm_s*1e6:.1f}", f"{100*acc:.2f}"])
+        rec[bits] = dict(payload_mb=pb / 1e6, acc=acc)
+    print("\n== Fig 9: bit-width sweep (GraphSAGE, 8 partitions) ==")
+    print(common.fmt_table(
+        ["bits", "main MB", "EC MB", "comm us (TPU)", "test acc %"], rows))
+    common.save("fig9_bitwidth", rec)
+    assert rec[32]["payload_mb"] / rec[1]["payload_mb"] == 32
+    assert rec[1]["acc"] > rec[32]["acc"] - 0.03    # 1-bit holds accuracy
+    return rec
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,57 @@
+"""Aggregate artifacts/dryrun/*.json into the §Roofline table (markdown)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def load_records(mesh: str = "pod", tag: str = ""):
+    recs = []
+    for p in sorted(ART.glob("*.json")):
+        r = json.loads(p.read_text())
+        if r.get("mesh") == mesh and r.get("tag", "") == tag:
+            recs.append(r)
+    return recs
+
+
+def fmt(x, nd=4):
+    if x is None:
+        return "-"
+    return f"{x:.{nd}g}"
+
+
+def markdown_table(recs) -> str:
+    hdr = ("| arch | shape | step | compute s | memory s | collective s | "
+           "bottleneck | useful ratio | roofline frac |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        ro = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['step']} | "
+            f"{fmt(ro['compute_s'])} | {fmt(ro['memory_s'])} | "
+            f"{fmt(ro['collective_s'])} | {ro['bottleneck']} | "
+            f"{fmt(ro['useful_flop_ratio'], 3)} | "
+            f"{fmt(ro['roofline_fraction'], 3)} |")
+    return "\n".join(lines)
+
+
+def run() -> dict:
+    out = {}
+    for mesh in ("pod", "multipod"):
+        recs = load_records(mesh)
+        if not recs:
+            continue
+        print(f"\n== Roofline table ({mesh}, {len(recs)} cells) ==")
+        print(markdown_table(recs))
+        out[mesh] = len(recs)
+    if not out:
+        print("no dry-run artifacts yet — run: "
+              "python -m repro.launch.dryrun --all --mesh both")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,57 @@
+"""Benchmark harness entry: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table2,fig9]
+
+Each module prints its table, persists artifacts/bench/<name>.json and
+asserts the paper's qualitative claim holds (32x comm cut, throughput
+ordering, accuracy retention, ...). ``roofline`` additionally aggregates the
+dry-run artifacts when present.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from . import (fig2_breakdown, fig8_convergence, fig9_bitwidth,
+               fig10_overhead, roofline, table1_sampling, table2_throughput,
+               table3_commvolume, table4_quantall)
+
+ALL = {
+    "table1": table1_sampling,
+    "fig2": fig2_breakdown,
+    "table2": table2_throughput,
+    "table3": table3_commvolume,
+    "fig8": fig8_convergence,
+    "fig9": fig9_bitwidth,
+    "table4": table4_quantall,
+    "fig10": fig10_overhead,
+    "roofline": roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset, e.g. table2,fig9")
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(ALL)
+    failed = []
+    for name in names:
+        t0 = time.time()
+        print(f"\n{'='*72}\nbenchmark: {name}\n{'='*72}")
+        try:
+            ALL[name].run()
+            print(f"[{name}] done in {time.time()-t0:.1f}s")
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+    print(f"\n{len(names)-len(failed)}/{len(names)} benchmarks passed")
+    if failed:
+        print("failed:", failed)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Architecture registry: ``--arch <id>`` resolution for launch/ and tests."""
+from __future__ import annotations
+
+from . import (deepseek_v2_236b, dlrm_mlperf, gemma2_27b, granite_3_2b,
+               meshgraphnet, nequip, olmoe_1b_7b, paper_gnn, pna, schnet,
+               yi_34b)
+from .base import ArchSpec, ShapeCell  # noqa: F401
+
+REGISTRY: dict[str, ArchSpec] = {
+    s.arch_id: s for s in (
+        granite_3_2b.SPEC, gemma2_27b.SPEC, yi_34b.SPEC, olmoe_1b_7b.SPEC,
+        deepseek_v2_236b.SPEC,
+        nequip.SPEC, schnet.SPEC, meshgraphnet.SPEC, pna.SPEC,
+        dlrm_mlperf.SPEC,
+        paper_gnn.GCN_SPEC, paper_gnn.SAGE_SPEC, paper_gnn.GAT_SPEC,
+    )
+}
+
+ASSIGNED = ("granite-3-2b", "gemma2-27b", "yi-34b", "olmoe-1b-7b",
+            "deepseek-v2-236b", "nequip", "schnet", "meshgraphnet", "pna",
+            "dlrm-mlperf")
+
+
+def get(arch_id: str) -> ArchSpec:
+    if arch_id not in REGISTRY:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(REGISTRY)}")
+    return REGISTRY[arch_id]

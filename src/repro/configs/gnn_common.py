@@ -1,0 +1,13 @@
+"""Shared GNN arch descriptor: how to build the model + what the block needs."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNArch:
+    name: str
+    make: Callable[[int, int], object]   # (d_in, d_out) -> model
+    d_edge_attr: int = 0                 # 0 = no geometry; 13 = dist+unit+sh(l<=2)
+    needs_weights: bool = True           # GCN-normalized A+I edge weights

@@ -1,0 +1,29 @@
+"""The paper's own evaluation models: GCN, GraphSAGE, GAT (Sylvie §4).
+
+These are not in the assigned-architecture pool but are the models every
+paper-reproduction benchmark (Tables 2-4, Figs 1/5-10) trains.
+"""
+from ..models.gnn.models import GAT, GCN, GraphSAGE
+from .base import ArchSpec, GNN_SHAPES
+from .gnn_common import GNNArch
+
+
+def _make(name, ctor, **kw):
+    def config() -> GNNArch:
+        return GNNArch(name, make=lambda d_in, d_out: ctor(
+            d_in=d_in, d_out=d_out, **kw))
+
+    def reduced() -> GNNArch:
+        small = dict(kw)
+        small["d_hidden"] = 16
+        small["n_layers"] = 2
+        return GNNArch(name + "-smoke", make=lambda d_in, d_out: ctor(
+            d_in=d_in, d_out=d_out, **small))
+
+    return ArchSpec(name, "gnn", "paper (Sylvie §4)", config, reduced,
+                    GNN_SHAPES)
+
+
+GCN_SPEC = _make("gcn", GCN, d_hidden=256, n_layers=2)
+SAGE_SPEC = _make("graphsage", GraphSAGE, d_hidden=256, n_layers=2)
+GAT_SPEC = _make("gat", GAT, d_hidden=64, n_layers=2, heads=4)

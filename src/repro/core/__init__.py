@@ -1,0 +1,1 @@
+from . import exchange, quantization, staleness, sylvie  # noqa: F401

@@ -1,0 +1,112 @@
+"""Halo exchange primitives: boundary gather/scatter + the all-to-all itself.
+
+All GNN runtime code operates on *stacked* arrays with a leading partition axis
+``P`` — e.g. node features ``(P, n_local, d)``. Two execution modes share this code:
+
+* **simulated** (``axis_name=None``): the full stack lives on one device; the
+  exchange is the pure transpose ``out[p, q*h+s] = in[q, p*h+s]``. Reference
+  semantics; used by tests and CPU training runs.
+* **shard_map** (``axis_name='parts'``): each device holds one partition — the
+  leading axis is locally size 1 — and the exchange is a single
+  ``jax.lax.all_to_all`` over the halo-buffer axis (axis 1, ``tiled=True``), which
+  implements exactly the same transpose across devices.
+
+The exchange permutation is an involution (a transpose), so the backward
+communication (Alg. 2) reuses the same primitive.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .quantization import QuantizedTensor
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PlanArrays:
+    """Device-side halo plan (stacked, leading axis P). See graph/partition.py."""
+
+    send_idx: jax.Array   # (P, P*h_pad) int32 — local rows to send, pairwise blocks
+    send_mask: jax.Array  # (P, P*h_pad) bool
+    recv_mask: jax.Array  # (P, P*h_pad) bool
+    n_local: int = dataclasses.field(metadata=dict(static=True))
+    h_pad: int = dataclasses.field(metadata=dict(static=True))
+    n_parts: int = dataclasses.field(metadata=dict(static=True))
+
+    @staticmethod
+    def from_plan(plan) -> "PlanArrays":
+        p = plan
+        return PlanArrays(
+            send_idx=jnp.asarray(p.send_idx.reshape(p.n_parts, -1), jnp.int32),
+            send_mask=jnp.asarray(p.send_mask.reshape(p.n_parts, -1)),
+            recv_mask=jnp.asarray(p.recv_mask),
+            n_local=int(p.n_local), h_pad=int(p.h_pad), n_parts=int(p.n_parts))
+
+    @staticmethod
+    def from_spec(spec) -> "PlanArrays":
+        """ShapeDtypeStruct stand-ins for the dry-run (no allocation)."""
+        s = spec
+        rows = s.n_parts * s.h_pad
+        return PlanArrays(
+            send_idx=jax.ShapeDtypeStruct((s.n_parts, rows), jnp.int32),
+            send_mask=jax.ShapeDtypeStruct((s.n_parts, rows), jnp.bool_),
+            recv_mask=jax.ShapeDtypeStruct((s.n_parts, rows), jnp.bool_),
+            n_local=int(s.n_local), h_pad=int(s.h_pad), n_parts=int(s.n_parts))
+
+
+def gather_boundary(h: jax.Array, plan: PlanArrays) -> jax.Array:
+    """(P, n_local, d) -> (P, P*h_pad, d) send buffer (masked)."""
+    buf = jnp.take_along_axis(h, plan.send_idx[..., None], axis=1)
+    return jnp.where(plan.send_mask[..., None], buf, 0)
+
+
+def scatter_boundary_grad(g: jax.Array, plan: PlanArrays) -> jax.Array:
+    """(P, P*h_pad, d) received grads -> (P, n_local, d) scatter-add onto owners.
+
+    A node sent to multiple partitions accumulates all their gradients (sum) —
+    Alg. 2 line 13."""
+    g = jnp.where(plan.send_mask[..., None], g, 0)
+
+    def one(gp, idx):
+        return jnp.zeros((plan.n_local, g.shape[-1]), g.dtype).at[idx].add(gp)
+
+    return jax.vmap(one)(g, plan.send_idx)
+
+
+def exchange(x: jax.Array, axis_name: Optional[str]) -> jax.Array:
+    """The halo all-to-all. ``x``: (P_local, P*h_pad, ...) pairwise-blocked buffer.
+
+    simulated: transpose across the stacked leading axis.
+    shard_map: tiled all_to_all over axis 1 (per-device leading axis is size 1).
+    """
+    if axis_name is None:
+        p = x.shape[0]
+        h = x.shape[1] // p
+        y = x.reshape((p, p, h) + x.shape[2:])
+        y = jnp.swapaxes(y, 0, 1)
+        return y.reshape((p, p * h) + x.shape[2:])
+    return jax.lax.all_to_all(x, axis_name, split_axis=1, concat_axis=1, tiled=True)
+
+
+def exchange_quantized(qt: QuantizedTensor, axis_name: Optional[str]) -> QuantizedTensor:
+    """Exchange a quantized payload: data + error-compensation (scale, zero) move
+    together (paper §3.2 Communicator)."""
+    return QuantizedTensor(
+        data=exchange(qt.data, axis_name),
+        scale=exchange(qt.scale, axis_name) if qt.scale.size else qt.scale,
+        zero=exchange(qt.zero, axis_name) if qt.zero.size else qt.zero,
+        bits=qt.bits, feat_dim=qt.feat_dim)
+
+
+def exchange_bytes(plan: PlanArrays, d: int, bits: int,
+                   scale_dtype=jnp.bfloat16) -> tuple[int, int]:
+    """(payload, error-compensation) bytes moved per exchange per partition —
+    the Table-3 accounting and the roofline collective term."""
+    from .quantization import comm_bytes
+    rows = plan.n_parts * plan.h_pad
+    return comm_bytes(rows, d, bits, scale_dtype)

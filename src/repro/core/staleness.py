@@ -1,0 +1,61 @@
+"""Staleness state for Sylvie-A + the Bounded Staleness Adaptor schedule.
+
+``HaloState`` carries, per exchange site (one per GNN layer per direction):
+  * ``feats[i]`` — the dequantized halo features received during the previous step
+  * ``grads[i]`` — the dequantized boundary gradients received during the previous
+    step's backward pass (pre-scatter, pairwise-block layout)
+
+Both are ordinary pytree leaves of the training state: they checkpoint, shard
+(leading partition axis), and donate like everything else.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .exchange import PlanArrays
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class HaloState:
+    feats: tuple
+    grads: tuple
+
+    def gslots(self):
+        """Zero-valued dummies whose gradients carry the fresh outgoing boundary
+        gradients out of ``jax.grad`` (see core/sylvie.py)."""
+        return tuple(jnp.zeros_like(f) for f in self.feats)
+
+    @staticmethod
+    def zeros(plan: PlanArrays, dims: Sequence[int], dtype=jnp.float32,
+              stacked_parts: int | None = None) -> "HaloState":
+        p = stacked_parts if stacked_parts is not None else plan.n_parts
+        rows = plan.n_parts * plan.h_pad
+        feats = tuple(jnp.zeros((p, rows, d), dtype) for d in dims)
+        return HaloState(feats=feats, grads=tuple(jnp.zeros_like(f) for f in feats))
+
+    @staticmethod
+    def zeros_spec(plan: PlanArrays, dims: Sequence[int], dtype=jnp.float32,
+                   stacked_parts: int | None = None) -> "HaloState":
+        """ShapeDtypeStruct version for the dry-run."""
+        p = stacked_parts if stacked_parts is not None else plan.n_parts
+        rows = plan.n_parts * plan.h_pad
+        feats = tuple(jax.ShapeDtypeStruct((p, rows, d), dtype) for d in dims)
+        return HaloState(feats=feats,
+                         grads=tuple(jax.ShapeDtypeStruct(f.shape, f.dtype)
+                                     for f in feats))
+
+
+def use_sync_step(epoch: int, eps_s: int | None) -> bool:
+    """Bounded Staleness Adaptor schedule (paper §3.3): one synchronous epoch every
+    ``eps_s`` epochs (``None`` = pure Sylvie-A; 1 = always synchronous). Epoch 0 is
+    always synchronous — it doubles as the cache warmup."""
+    if epoch == 0:
+        return True
+    if eps_s is None:
+        return False
+    return epoch % eps_s == 0

@@ -1,0 +1,206 @@
+"""Sylvie: one-bit quantized halo communication, synchronous and asynchronous.
+
+Three communication modes (paper §3):
+
+* ``vanilla``  — full-precision synchronous exchange (the DGL baseline). Same code
+  path as Sylvie-S with ``bits=32`` (quantize is then the identity).
+* ``sync``     — **Sylvie-S**: quantize -> all-to-all -> dequantize each layer, both
+  passes. The backward pass communicates *quantized feature gradients*
+  (Alg. 2 lines 10-12) via the custom_vjp below.
+* ``async``    — **Sylvie-A**: layer compute consumes the *previous step's* halo
+  features (``feat_cache``); the fresh quantized exchange is emitted as a
+  new cache for the next step, so XLA can overlap it with compute.
+  Backward mirrors it: the cotangent on the stale halo is exchanged and
+  surfaces as the gradient of a zero-valued ``gslot`` input, becoming the
+  next step's ``grad_in`` (one-step-stale boundary gradients).
+
+The *Bounded Staleness Adaptor* (paper §3.3) lives in ``core/staleness.py`` /
+``train/trainer.py``: every ``eps_s`` epochs one synchronous step refreshes all
+caches.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import quantization as qlib
+from .exchange import (PlanArrays, exchange, exchange_quantized, gather_boundary,
+                       scatter_boundary_grad)
+
+Mode = str  # "vanilla" | "sync" | "async"
+
+
+@dataclasses.dataclass(frozen=True)
+class SylvieConfig:
+    mode: Mode = "sync"
+    bits: int = 1
+    stochastic: bool = True
+    axis_name: Optional[str] = None     # None = simulated single-process stack
+    scale_dtype: jnp.dtype = jnp.bfloat16
+    # BNS-GCN baseline (Wan et al. 2022a): random boundary-node sampling.
+    # Each epoch keeps a (1-p) fraction of halo rows, scaled by 1/(1-p);
+    # p=0 disables. Used by the Table-2 baseline comparison.
+    boundary_sample_p: float = 0.0
+
+    @property
+    def effective_bits(self) -> int:
+        return 32 if self.mode == "vanilla" else self.bits
+
+    def replace(self, **kw) -> "SylvieConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def _q_roundtrip(buf, key, bits, stochastic, scale_dtype, axis_name):
+    """quantize -> exchange -> dequantize (one direction of the Low-bit Module)."""
+    qt = qlib.quantize(buf, bits, key, stochastic, scale_dtype)
+    qr = exchange_quantized(qt, axis_name)
+    return qlib.dequantize(qr)
+
+
+# ---------------------------------------------------------------------------
+# Sylvie-S: synchronous quantized exchange with quantized backward communication
+# ---------------------------------------------------------------------------
+@partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def quantized_halo(h, plan: PlanArrays, fwd_key, bwd_key,
+                   bits: int, stochastic: bool, scale_dtype, axis_name):
+    """(P, n_local, d) -> (P, P*h_pad, d) dequantized halo features."""
+    buf = gather_boundary(h, plan)
+    out = _q_roundtrip(buf, fwd_key, bits, stochastic, scale_dtype, axis_name)
+    return jnp.where(plan.recv_mask[..., None], out, 0)
+
+
+def _qh_fwd(h, plan, fwd_key, bwd_key, bits, stochastic, scale_dtype, axis_name):
+    out = quantized_halo(h, plan, fwd_key, bwd_key,
+                         bits, stochastic, scale_dtype, axis_name)
+    return out, (plan, bwd_key)
+
+
+def _qh_bwd(bits, stochastic, scale_dtype, axis_name, res, g):
+    plan, bwd_key = res
+    g = jnp.where(plan.recv_mask[..., None], g, 0)
+    back = _q_roundtrip(g, bwd_key, bits, stochastic, scale_dtype, axis_name)
+    grad_h = scatter_boundary_grad(back, plan)
+    return (grad_h, None, None, None)
+
+
+quantized_halo.defvjp(_qh_fwd, _qh_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Sylvie-A: stale halo consumption + fresh exchange emission
+# ---------------------------------------------------------------------------
+def fresh_halo(h, plan: PlanArrays, key, bits, stochastic, scale_dtype, axis_name):
+    """The concurrent forward exchange: quantize this step's boundary features and
+    deliver them as *next* step's cache. Detached — no gradient flows (staleness
+    is handled by the grad_in path)."""
+    buf = gather_boundary(jax.lax.stop_gradient(h), plan)
+    out = _q_roundtrip(buf, key, bits, stochastic, scale_dtype, axis_name)
+    return jnp.where(plan.recv_mask[..., None], out, 0)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8, 9))
+def stale_halo(h, feat_cache, grad_in, gslot, plan: PlanArrays, bwd_key,
+               bits: int, stochastic: bool, scale_dtype, axis_name):
+    """Consume the stale halo; wire the staleness dataflow into autodiff.
+
+    * primal output  = ``feat_cache`` (previous step's dequantized halo features)
+    * grad wrt ``h``     = ``grad_in`` scattered onto boundary nodes (previous
+      step's incoming boundary gradients — Alg. 2 line 13, one step stale)
+    * grad wrt ``gslot`` = this step's outgoing quantized gradient exchange
+      (surfaces to the caller as the next step's ``grad_in``)
+    """
+    del h, grad_in, gslot, plan, bwd_key
+    return feat_cache
+
+
+def _sh_fwd(h, feat_cache, grad_in, gslot, plan, bwd_key,
+            bits, stochastic, scale_dtype, axis_name):
+    return feat_cache, (plan, grad_in, bwd_key)
+
+
+def _sh_bwd(bits, stochastic, scale_dtype, axis_name, res, g):
+    plan, grad_in, bwd_key = res
+    g = jnp.where(plan.recv_mask[..., None], g, 0)
+    fresh_grad = _q_roundtrip(g, bwd_key, bits, stochastic, scale_dtype, axis_name)
+    fresh_grad = jnp.where(plan.send_mask[..., None], fresh_grad, 0)
+    grad_h = scatter_boundary_grad(grad_in, plan)
+    return (grad_h, None, None, fresh_grad, None, None)
+
+
+stale_halo.defvjp(_sh_fwd, _sh_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Per-step orchestrator handed to the model
+# ---------------------------------------------------------------------------
+class SylvieComm:
+    """Created inside each traced step; models call ``comm.halo(h)`` once per
+    layer-exchange site. Collects fresh caches (async mode) as it goes."""
+
+    def __init__(self, cfg: SylvieConfig, plan: PlanArrays, key,
+                 feat_caches=None, grad_ins=None, gslots=None):
+        self.cfg = cfg
+        self.plan = plan
+        self.key = key
+        self.feat_caches = feat_caches
+        self.grad_ins = grad_ins
+        self.gslots = gslots
+        self.new_feat_caches: list = []
+        self._site = 0
+
+    def _part_key(self):
+        """Decorrelate stochastic-rounding noise across partitions: fold the
+        partition index into the key under shard_map (the simulated mode's
+        single batched uniform draw is already decorrelated)."""
+        axis = self.cfg.axis_name
+        if axis is None:
+            return self.key
+        names = (axis,) if isinstance(axis, str) else tuple(axis)
+        idx = jax.lax.axis_index(names[0])
+        for a in names[1:]:
+            idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        return jax.random.fold_in(self.key, idx)
+
+    def _bns_mask(self, key):
+        """BNS-GCN-style boundary sampling: one Bernoulli keep-mask per halo
+        row per epoch, shared by forward and backward (paper baseline)."""
+        p = self.cfg.boundary_sample_p
+        if p <= 0.0:
+            return None
+        rows = self.plan.recv_mask.shape
+        return (jax.random.bernoulli(key, 1.0 - p, rows) / (1.0 - p))
+
+    def halo(self, h: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        i = self._site
+        self._site += 1
+        key = self._part_key()
+        kf = jax.random.fold_in(key, 2 * i)
+        kb = jax.random.fold_in(key, 2 * i + 1)
+        bits = cfg.effective_bits
+        if cfg.mode in ("vanilla", "sync"):
+            halo = quantized_halo(h, self.plan, kf, kb, bits, cfg.stochastic,
+                                  cfg.scale_dtype, cfg.axis_name)
+            bns = self._bns_mask(jax.random.fold_in(key, 999))
+            if bns is not None:
+                halo = halo * bns[..., None]
+            # a synchronous step doubles as a cache refresh for Sylvie-A
+            # (Bounded Staleness Adaptor); caller stop-gradients these.
+            self.new_feat_caches.append(halo)
+            return halo
+        # async: consume stale, emit fresh
+        halo = stale_halo(h, self.feat_caches[i], self.grad_ins[i], self.gslots[i],
+                          self.plan, kb, bits, cfg.stochastic, cfg.scale_dtype,
+                          cfg.axis_name)
+        self.new_feat_caches.append(
+            fresh_halo(h, self.plan, kf, bits, cfg.stochastic,
+                       cfg.scale_dtype, cfg.axis_name))
+        return halo
+
+    @property
+    def n_sites(self) -> int:
+        return self._site

@@ -1,0 +1,1 @@
+from . import formats, partition, sampling, synthetic  # noqa: F401

@@ -1,0 +1,1 @@
+from . import flash, quant, spmm  # noqa: F401

@@ -1,0 +1,1 @@
+from . import flash, ops, ref  # noqa: F401

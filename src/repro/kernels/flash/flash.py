@@ -1,0 +1,114 @@
+"""Pallas TPU flash-attention forward (identified §Perf next-lever).
+
+The dry-run's dominant LM memory term is the per-block f32 score tensors the
+XLA path materializes to HBM (EXPERIMENTS.md §Perf). This kernel keeps each
+(blk_q x blk_k) score tile in VMEM: per (batch-head, q-block) it sweeps KV
+blocks on the innermost sequential grid axis, carrying the online-softmax
+running (max, sum) and the output accumulator in the output refs — HBM sees
+q/k/v exactly once plus one (Sq, D) output write.
+
+Tiling: grid = (BH, Sq/blk_q, Skv/blk_k); the KV axis is the innermost
+(sequential on TPU) so accumulation across it is race-free — same schedule as
+kernels/spmm. blk sizes default to 128 x 128 (MXU-aligned); VMEM per step =
+q tile + k/v tiles + score tile ~= (3*blk*D + blk^2) * 4B << 16 MB for
+D <= 256. Causal q-blocks that lie entirely below the diagonal skip work via
+``pl.when`` (the classic flash causal-block skip).
+
+Normalization (acc / l) happens in the ops.py wrapper — keeping the kernel's
+outputs (acc, m, l) raw makes the oracle comparison exact and the backward
+(future work) reusable.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+NEG = -2.0e38
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, acc_ref, m_ref, l_ref, *,
+                  blk_q: int, blk_k: int, scale: float, causal: bool,
+                  window, kv_len: int):
+    iq = pl.program_id(1)
+    jk = pl.program_id(2)
+    q_lo = iq * blk_q
+    k_lo = jk * blk_k
+
+    @pl.when(jk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # causal block skip: this kv block starts after the last q row
+    run = True
+    if causal:
+        run = k_lo <= q_lo + blk_q - 1
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0].astype(jnp.float32) * scale        # (blk_q, d)
+        k = k_ref[0].astype(jnp.float32)                # (blk_k, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = q @ k.T                                     # (blk_q, blk_k) VMEM
+        qp = q_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kp = k_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kp < kv_len                  # padded kv columns never win
+        if causal:
+            mask &= kp <= qp
+        if window is not None:
+            mask &= qp - kp < window
+        s = jnp.where(mask, s, NEG)
+        m_prev = m_ref[0]
+        m_new = jnp.maximum(m_prev, s.max(-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[0] = l_ref[0] * corr + p.sum(-1)
+        acc_ref[0] = acc_ref[0] * corr[:, None] + p @ v
+        m_ref[0] = m_new
+
+
+@functools.partial(jax.jit, static_argnames=("blk_q", "blk_k", "causal",
+                                             "scale", "window", "interpret"))
+def flash_fwd(q, k, v, *, blk_q: int = 128, blk_k: int = 128,
+              causal: bool = True, scale: float = 1.0, window=None,
+              interpret: bool = False):
+    """(BH, Sq, D) x (BH, Skv, D) -> (acc, m, l); out = acc / l."""
+    bh, sq, d = q.shape
+    _, skv, _ = k.shape
+    blk_q = min(blk_q, sq)
+    blk_k = min(blk_k, skv)
+    pq = (sq + blk_q - 1) // blk_q * blk_q - sq
+    pk = (skv + blk_k - 1) // blk_k * blk_k - skv
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0)))
+    if pk:
+        # padded kv columns must never win the max: rely on the causal/window
+        # mask plus an explicit kv_len mask via window... simplest: pad k with
+        # zeros and mask by position below
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0)))
+    grid = (bh, (sq + pq) // blk_q, (skv + pk) // blk_k)
+
+    kern = functools.partial(_flash_kernel, blk_q=blk_q, blk_k=blk_k,
+                             scale=scale, causal=causal, window=window,
+                             kv_len=skv)
+    acc, m, l = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, blk_q, d), lambda b, i, j: (b, i, 0)),
+                  pl.BlockSpec((1, blk_k, d), lambda b, i, j: (b, j, 0)),
+                  pl.BlockSpec((1, blk_k, d), lambda b, i, j: (b, j, 0))],
+        out_specs=(pl.BlockSpec((1, blk_q, d), lambda b, i, j: (b, i, 0)),
+                   pl.BlockSpec((1, blk_q), lambda b, i, j: (b, i)),
+                   pl.BlockSpec((1, blk_q), lambda b, i, j: (b, i))),
+        out_shape=(jax.ShapeDtypeStruct((bh, sq + pq, d), jnp.float32),
+                   jax.ShapeDtypeStruct((bh, sq + pq), jnp.float32),
+                   jax.ShapeDtypeStruct((bh, sq + pq), jnp.float32)),
+        interpret=interpret,
+    )(q, k, v)
+    return acc[:, :sq], m[:, :sq], l[:, :sq]

@@ -1,0 +1,23 @@
+"""Jit'd wrapper: normalized flash attention (interpret mode off-TPU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import flash as _k
+from . import ref as _r
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True, scale: float = 1.0,
+                    window=None, **kw):
+    """q/k/v: (BH, S, D) -> (BH, Sq, D), numerically safe normalization."""
+    acc, m, l = _k.flash_fwd(q, k, v, causal=causal, scale=scale,
+                             window=window, interpret=_interpret(), **kw)
+    return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+
+flash_ref = _r.flash_ref

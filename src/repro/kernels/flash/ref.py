@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the flash-attention forward kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_ref(q, k, v, *, causal: bool = True, scale: float = 1.0,
+              window: int | None = None) -> jnp.ndarray:
+    """q: (BH, Sq, D); k/v: (BH, Skv, D) -> (BH, Sq, D). O(S^2) reference."""
+    logits = jnp.einsum("bqd,bkd->bqk", q * scale, k).astype(jnp.float32)
+    sq, skv = q.shape[1], k.shape[1]
+    qp = jnp.arange(sq)[:, None]
+    kp = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kp <= qp
+    if window is not None:
+        mask &= qp - kp < window
+    logits = jnp.where(mask[None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p.astype(v.dtype), v)

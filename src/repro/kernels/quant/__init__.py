@@ -1,0 +1,1 @@
+from . import ops, quant, ref  # noqa: F401

@@ -1,0 +1,19 @@
+"""Jit'd wrapper for the Pallas SpMM kernel (interpret mode off-TPU)."""
+from __future__ import annotations
+
+import jax
+
+from . import ref as _r
+from . import spmm as _k
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def spmm(table, idx, w, **kw):
+    return _k.spmm(table, idx, w, interpret=_interpret(), **kw)
+
+
+spmm_ref = _r.spmm_ref
+csr_from_edges = _r.csr_from_edges

@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the padded-CSR row-block SpMM aggregation kernel.
+
+Contract (the GNN aggregation hot path, Alg. 1 line 15 / cuSPARSE SpMM in the
+paper): for every destination row ``i``
+
+    out[i, :] = sum_s  w[i, s] * table[idx[i, s], :]        (s < max_deg)
+
+``idx``/``w`` are the padded-CSR neighbor lists (padding slots carry w = 0 and
+idx pointing at row 0). ``table`` is the concatenated [local ; halo] feature
+table. GCN normalization / mean aggregation are expressed through ``w``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def spmm_ref(table: jnp.ndarray, idx: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """(n_src, d), (n_rows, max_deg) int32, (n_rows, max_deg) -> (n_rows, d)."""
+    gathered = table[idx]                                  # (n_rows, max_deg, d)
+    return jnp.einsum("rs,rsd->rd", w, gathered.astype(w.dtype))
+
+
+def csr_from_edges(edges, edge_w, n_rows: int, max_deg: int):
+    """Host-side: (E, 2) [src, dst] + per-edge weight -> padded-CSR (idx, w).
+
+    numpy utility used by benchmarks/tests to drive the kernel from the
+    runtime's edge-list format.
+    """
+    import numpy as np
+    idx = np.zeros((n_rows, max_deg), dtype=np.int32)
+    w = np.zeros((n_rows, max_deg), dtype=np.float32)
+    fill = np.zeros(n_rows, dtype=np.int64)
+    for (s, dst), ew in zip(edges, edge_w):
+        k = fill[dst]
+        if k < max_deg:
+            idx[dst, k] = s
+            w[dst, k] = ew
+            fill[dst] = k + 1
+    return idx, w

@@ -1,0 +1,189 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + \
+    " --xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) for the production
+meshes and emit the roofline artifacts (EXPERIMENTS.md §Dry-run / §Roofline).
+
+The two lines above MUST run before any other import (jax locks the device
+count on first init); 512 placeholder host devices back both the 16x16
+single-pod mesh and the 2x16x16 multi-pod mesh.
+
+Usage:
+    python -m repro.launch.dryrun --arch granite-3-2b --shape train_4k
+    python -m repro.launch.dryrun --all [--mesh pod|multipod|both]
+    python -m repro.launch.dryrun --arch pna --shape ogb_products \
+        --sylvie-mode async --bits 2 --tag async2   # hillclimb variants
+
+Each cell writes artifacts/dryrun/<arch>__<shape>__<mesh>[__tag].json with
+cost/memory analysis, the per-opcode collective table and the three roofline
+terms. ``--all`` forks one subprocess per cell so a pathological compile
+cannot wedge the sweep (and compiles run in parallel, capped by --jobs).
+"""
+import argparse
+import json
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+ARTIFACTS = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, out_dir: Path,
+             sylvie_mode: str = "sync", bits: int = 1, tag: str = "",
+             save_hlo: bool = False, attn_remat: bool = False,
+             dlrm_qbits=None) -> dict:
+    import jax
+
+    from . import cells as cellslib
+    from . import hlo as hlolib
+    from .mesh import make_production_mesh, n_devices
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    from .. import configs as configlib
+    kind = configlib.get(arch).kind
+    kw = {}
+    if kind == "gnn":
+        kw = dict(sylvie_mode=sylvie_mode, bits=bits)
+    if kind == "recsys" and dlrm_qbits is not None:
+        kw = dict(qbits=dlrm_qbits)
+    if attn_remat:
+        from ..models.lm import model as LM
+        LM.set_attn_scan_remat(True)
+    cell = cellslib.build_cell(arch, shape, mesh, **kw)
+    lowered = cell.lower()
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    roof, coll, mem = hlolib.analyze(compiled, cell.n_devices,
+                                     cell.model_flops)
+    extrapolated = False
+
+    if kind == "lm" and mesh_kind == "pod":
+        # The deployable program above scans its layers, and HLO cost
+        # analysis tallies a `while` body once (not x trip count). Every
+        # cost component is base + count x body, so two shallow UNROLLED
+        # probes (depth 1 and 2) recover the exact full-depth numbers:
+        #   cost(count) = cost(d1) + (count - 1) * (cost(d2) - cost(d1)).
+        # Probes run on the single-pod mesh only — the multi-pod pass is the
+        # compile proof (the roofline table is single-pod per EXPERIMENTS.md).
+        probes = {}
+        for d in (1, 2):
+            c = cellslib.build_cell(arch, shape, mesh, unroll=True, depth=d)
+            cc = c.lower().compile()
+            r, s, _ = hlolib.analyze(cc, c.n_devices, None)
+            probes[d] = (r, s)
+        count = cellslib.lm_scaled_count(configlib.get(arch).config())
+        (r1, s1), (r2, s2) = probes[1], probes[2]
+
+        def ext(a, b):
+            return max(a, a + (count - 1) * (b - a))
+
+        roof = hlolib.Roofline(
+            ext(r1.flops_per_device, r2.flops_per_device),
+            ext(r1.hbm_bytes_per_device, r2.hbm_bytes_per_device),
+            ext(s1.wire_bytes, s2.wire_bytes),
+            cell.n_devices, cell.model_flops)
+        by_op = {}
+        for op in set(s1.by_op) | set(s2.by_op):
+            o1 = s1.by_op.get(op, dict(count=0, payload=0.0, wire=0.0))
+            o2 = s2.by_op.get(op, dict(count=0, payload=0.0, wire=0.0))
+            by_op[op] = dict(count=int(ext(o1["count"], o2["count"])),
+                             payload=ext(o1["payload"], o2["payload"]),
+                             wire=ext(o1["wire"], o2["wire"]))
+        coll = hlolib.CollectiveStats(
+            wire_bytes=roof.wire_bytes_per_device,
+            payload_bytes=ext(s1.payload_bytes, s2.payload_bytes),
+            by_op=by_op, count=sum(o["count"] for o in by_op.values()))
+        extrapolated = True
+
+    rec = dict(
+        arch=arch, shape=shape, mesh=mesh_kind, step=cell.step, tag=tag,
+        n_devices=cell.n_devices, cost_extrapolated=extrapolated,
+        lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+        roofline=roof.as_dict(),
+        collectives=dict(count=coll.count, wire_bytes=coll.wire_bytes,
+                         payload_bytes=coll.payload_bytes, by_op=coll.by_op),
+        memory=mem, meta=cell.meta)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    name = f"{arch}__{shape}__{mesh_kind}" + (f"__{tag}" if tag else "")
+    (out_dir / f"{name}.json").write_text(json.dumps(rec, indent=1))
+    if save_hlo:
+        (out_dir / f"{name}.hlo.txt").write_text(compiled.as_text())
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--jobs", type=int, default=4)
+    ap.add_argument("--sylvie-mode", default="sync",
+                    choices=["vanilla", "sync", "async"])
+    ap.add_argument("--bits", type=int, default=1)
+    ap.add_argument("--attn-remat", action="store_true",
+                    help="§Perf: remat the attention KV-block scan")
+    ap.add_argument("--dlrm-qbits", type=int, default=None,
+                    help="§Perf: Sylvie-quantized DLRM embedding exchange")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--out", default=str(ARTIFACTS))
+    args = ap.parse_args()
+    out_dir = Path(args.out)
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+
+    if not args.all:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        for mk in meshes:
+            rec = run_cell(args.arch, args.shape, mk, out_dir,
+                           args.sylvie_mode, args.bits, args.tag,
+                           args.save_hlo, args.attn_remat, args.dlrm_qbits)
+            r = rec["roofline"]
+            print(f"{args.arch} x {args.shape} [{mk}] step={rec['step']} "
+                  f"compute={r['compute_s']:.4g}s memory={r['memory_s']:.4g}s "
+                  f"collective={r['collective_s']:.4g}s "
+                  f"bottleneck={r['bottleneck']} "
+                  f"roofline_frac={r['roofline_fraction']}")
+        return
+
+    from . import cells as cellslib
+    todo = [(a, s, mk) for (a, s) in cellslib.all_cells() for mk in meshes]
+    procs: list[tuple] = []
+    failed = []
+
+    def reap(block=False):
+        for i, (p, a, s, mk) in enumerate(list(procs)):
+            if p.poll() is not None or block:
+                out, _ = p.communicate()
+                ok = p.returncode == 0
+                print(("OK   " if ok else "FAIL ") + f"{a} x {s} [{mk}]",
+                      flush=True)
+                if not ok:
+                    failed.append((a, s, mk))
+                    sys.stdout.write(out.decode()[-2000:] + "\n")
+                procs.remove((p, a, s, mk))
+
+    for a, s, mk in todo:
+        while len(procs) >= args.jobs:
+            reap()
+            time.sleep(1)
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", a,
+               "--shape", s, "--mesh", mk, "--out", str(out_dir)]
+        p = subprocess.Popen(cmd, stdout=subprocess.PIPE,
+                             stderr=subprocess.STDOUT)
+        procs.append((p, a, s, mk))
+    while procs:
+        reap()
+        time.sleep(1)
+    print(f"\n{len(todo) - len(failed)}/{len(todo)} cells passed")
+    if failed:
+        print("failed:", failed)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

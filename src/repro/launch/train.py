@@ -1,0 +1,180 @@
+"""End-to-end launcher: train or serve any registered architecture.
+
+GNN archs (the paper's setting) train full-graph with Sylvie quantized halo
+exchange; LM archs train on the synthetic token stream or serve batched
+decode; DLRM trains on the synthetic Criteo stream.
+
+Examples (CPU-sized; production meshes via launch/dryrun.py):
+    python -m repro.launch.train --arch gcn --mode sync --bits 1 --epochs 50
+    python -m repro.launch.train --arch gcn --mode async --eps-s 5 --parts 8
+    python -m repro.launch.train --arch olmoe-1b-7b --reduced --steps 50
+    python -m repro.launch.train --arch dlrm-mlperf --reduced --steps 100
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def train_gnn(args) -> None:
+    from .. import configs as configlib
+    from ..core.sylvie import SylvieConfig
+    from ..graph import formats, partition, synthetic
+    from ..models.gnn import blocks as B
+    from ..train.trainer import GNNTrainer
+
+    spec = configlib.get(args.arch)
+    arch = spec.reduced() if args.reduced else spec.config()
+    g = synthetic.by_name(args.graph, seed=args.seed)
+    ei = formats.add_self_loops(g.edge_index, g.n_nodes)
+    ew = formats.gcn_edge_weights(ei, g.n_nodes)
+    g = formats.Graph(g.n_nodes, ei, g.x, g.y, g.train_mask, g.val_mask,
+                      g.test_mask, pos=g.pos, n_classes=g.n_classes,
+                      edge_attr=None)
+    if arch.d_edge_attr:
+        if g.pos is None:
+            rng = np.random.default_rng(0)
+            g.pos = rng.normal(0, 1, (g.n_nodes, 3)).astype(np.float32)
+        g.edge_attr = B.geometry_edge_attr(g)
+    pg = partition.partition_graph(g, args.parts, edge_weight=ew)
+    model = arch.make(g.x.shape[1], g.n_classes)
+    cfg = SylvieConfig(mode=args.mode, bits=args.bits)
+    tr = GNNTrainer(model, pg, cfg, eps_s=args.eps_s, seed=args.seed,
+                    ckpt_dir=args.ckpt_dir)
+    if args.resume and tr.resume():
+        print(f"resumed at epoch {tr.epoch}")
+    t0 = time.time()
+    for _ in range(args.epochs):
+        m = tr.train_epoch()
+        if tr.epoch % args.log_every == 0:
+            acc = tr.evaluate("val")
+            print(f"epoch {m.epoch:4d} [{m.mode}] loss {m.loss:.4f} "
+                  f"val {acc:.4f} comm {m.comm_payload_mb:.2f}MB "
+                  f"(+{m.comm_ec_mb:.2f}MB ec) {m.seconds*1e3:.1f}ms")
+    print(f"test acc {tr.evaluate('test'):.4f}  "
+          f"({args.epochs} epochs in {time.time()-t0:.1f}s)")
+    if args.ckpt_dir:
+        tr.save()
+
+
+def train_lm(args) -> None:
+    from .. import configs as configlib
+    from ..data.pipeline import Prefetcher, token_stream
+    from ..models.lm import model as LM
+    from ..train import optimizer as optlib
+
+    spec = configlib.get(args.arch)
+    cfg = spec.reduced() if args.reduced else spec.config()
+    opt = optlib.adam(args.lr)
+    key = jax.random.PRNGKey(args.seed)
+    params = LM.init_params(key, cfg, dtype=jnp.float32)
+    state = (params, opt.init(params), jnp.zeros((), jnp.int32))
+    step_fn = jax.jit(LM.make_train_step(cfg, opt))
+    stream = Prefetcher(token_stream(cfg.vocab, args.batch, args.seq,
+                                     args.seed, n_batches=args.steps))
+    t0 = time.time()
+    for i, (tok, lab) in enumerate(stream):
+        state, loss = step_fn(state, tok, lab)
+        if (i + 1) % args.log_every == 0:
+            print(f"step {i+1:5d} loss {float(loss):.4f} "
+                  f"({(i+1)*args.batch*args.seq/(time.time()-t0):.0f} tok/s)")
+    print(f"final loss {float(loss):.4f}")
+
+
+def serve_lm(args) -> None:
+    from .. import configs as configlib
+    from ..models.lm import model as LM
+
+    spec = configlib.get(args.arch)
+    cfg = spec.reduced() if args.reduced else spec.config()
+    key = jax.random.PRNGKey(args.seed)
+    params = LM.init_params(key, cfg, dtype=jnp.float32)
+    b, s_ctx, new = args.batch, args.seq, args.decode_tokens
+    prefill = jax.jit(LM.make_prefill_step(cfg, b, s_ctx + new))
+    decode = jax.jit(LM.make_decode_step(cfg))
+    prompts = jax.random.randint(key, (b, s_ctx), 0, cfg.vocab)
+    pad = jnp.zeros((b, new), jnp.int32)
+    last, caches = prefill(params, jnp.concatenate([prompts, pad], 1)[:, :s_ctx + new][:, :s_ctx + new])
+    # NB: prefill cache is sized for the full horizon; positions >= s_ctx are
+    # masked by kv_len during decode.
+    tok = jnp.argmax(last, -1)[:, None].astype(jnp.int32)
+    out = [tok]
+    t0 = time.time()
+    for i in range(new - 1):
+        lg, caches = decode(params, caches, tok,
+                            jnp.asarray(s_ctx + i, jnp.int32))
+        tok = jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
+        out.append(tok)
+    dt = time.time() - t0
+    print(f"decoded {b}x{new} tokens, {b*(new-1)/dt:.1f} tok/s")
+    print("sample:", np.asarray(jnp.concatenate(out, 1))[0][:16])
+
+
+def train_dlrm(args) -> None:
+    from .. import configs as configlib
+    from ..data.pipeline import Prefetcher, criteo_stream
+    from ..models.recsys import dlrm as D
+    from ..train import optimizer as optlib
+
+    spec = configlib.get(args.arch)
+    cfg = spec.reduced() if args.reduced else spec.config()
+    opt = optlib.adam(args.lr)
+    key = jax.random.PRNGKey(args.seed)
+    dp = D.init_dense_params(key, cfg)
+    tb = D.init_table(jax.random.fold_in(key, 1), cfg, n_dev=1)
+    state = (dp, tb, opt.init(dp), opt.init(tb), jnp.zeros((), jnp.int32))
+    step = jax.jit(D.make_train_step(cfg, opt, None))
+    stream = Prefetcher(criteo_stream(cfg, args.batch, args.seed,
+                                      n_batches=args.steps))
+    for i, (dense, ids, label) in enumerate(stream):
+        state, loss = step(state, dense, ids, label,
+                           jax.random.fold_in(key, i))
+        if (i + 1) % args.log_every == 0:
+            print(f"step {i+1:5d} loss {float(loss):.4f}")
+    print(f"final loss {float(loss):.4f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-scale config (CPU-sized)")
+    ap.add_argument("--serve", action="store_true",
+                    help="LM: batched prefill+decode instead of training")
+    # GNN
+    ap.add_argument("--graph", default="planted",
+                    choices=["planted", "powerlaw", "grid", "molecule"])
+    ap.add_argument("--parts", type=int, default=4)
+    ap.add_argument("--mode", default="sync",
+                    choices=["vanilla", "sync", "async"])
+    ap.add_argument("--bits", type=int, default=1)
+    ap.add_argument("--eps-s", type=int, default=None)
+    ap.add_argument("--epochs", type=int, default=50)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--resume", action="store_true")
+    # LM / DLRM
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--decode-tokens", type=int, default=32)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    from .. import configs as configlib
+    kind = configlib.get(args.arch).kind
+    if kind == "gnn":
+        train_gnn(args)
+    elif kind == "lm":
+        serve_lm(args) if args.serve else train_lm(args)
+    else:
+        train_dlrm(args)
+
+
+if __name__ == "__main__":
+    main()

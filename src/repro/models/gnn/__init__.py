@@ -1,0 +1,3 @@
+from .models import GCN, GAT, GraphSAGE, MeshGraphNet, PNA, SchNet  # noqa: F401
+from .nequip import NequIP  # noqa: F401
+from . import blocks, so3  # noqa: F401

@@ -1,0 +1,134 @@
+"""NequIP: E(3)-equivariant interatomic-potential GNN [arXiv:2101.03164].
+
+Assigned config: 5 layers, hidden multiplicity 32, l_max=2, 8 radial basis
+functions, cutoff 5. Node features are irreps 32x0e + 32x1o + 32x2e stored flat
+(width 32*(1+3+5) = 288); each interaction layer:
+
+  1. halo-exchange the flat irrep features (this is the Sylvie-quantized wire
+     format — see DESIGN.md on equivariance-vs-quantization noise),
+  2. per-edge tensor product  h_u (x) Y(r_uv)  over all coupled (l1,l2,l3) paths
+     (Gaunt tensors from ``so3.py``), weighted by a radial MLP on the RBF of the
+     edge length with a smooth cosine cutoff envelope,
+  3. scatter-sum to destination nodes, per-l self-interaction (mul-mixing linear),
+  4. gate nonlinearity: SiLU on scalars; l>0 irreps gated by sigmoids of scalars.
+
+``edge_attr`` carries [dist(1), unit(3), sh(9)] computed host-side on the global
+graph (geometry is static during training).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import nn
+from . import blocks as B
+from . import so3
+
+LS = (0, 1, 2)
+
+
+def _l_slice(l: int, mul: int) -> slice:
+    start = sum(mul * (2 * k + 1) for k in LS if k < l)
+    return slice(start, start + mul * (2 * l + 1))
+
+
+@dataclasses.dataclass(frozen=True)
+class NequIP:
+    d_in: int
+    d_out: int = 0
+    mul: int = 32            # hidden multiplicity per l
+    n_layers: int = 5
+    l_max: int = 2
+    n_rbf: int = 8
+    cutoff: float = 5.0
+
+    @property
+    def width(self) -> int:
+        return self.mul * (self.l_max + 1) ** 2
+
+    @property
+    def paths(self):
+        ls = tuple(range(self.l_max + 1))
+        return so3.coupled_paths(ls, ls, ls)
+
+    def comm_dims(self):
+        return [self.width] * self.n_layers
+
+    def init(self, key):
+        ke, ko, key = jax.random.split(key, 3)
+        p = {"embed": nn.linear_init(ke, self.d_in, self.mul),
+             "out": nn.linear_init(ko, self.mul, self.d_out)}
+        n_paths = len(self.paths)
+        for i in range(self.n_layers):
+            kr, ks, ka, kg, key = jax.random.split(key, 5)
+            scale = 1.0 / np.sqrt(self.mul)
+            p[f"layer{i}"] = {
+                "radial": nn.mlp_init(kr, [self.n_rbf, self.mul,
+                                           n_paths * self.mul]),
+                "w_self": {l: jax.random.normal(jax.random.fold_in(ks, l),
+                                                (self.mul, self.mul)) * scale
+                           for l in range(self.l_max + 1)},
+                "w_agg": {l: jax.random.normal(jax.random.fold_in(ka, l),
+                                               (self.mul, self.mul)) * scale
+                          for l in range(self.l_max + 1)},
+                "gate": nn.linear_init(kg, self.mul, self.l_max * self.mul),
+            }
+        return p
+
+    def _rbf(self, dist):
+        centers = jnp.linspace(0.0, self.cutoff, self.n_rbf)
+        gamma = 0.5 * (self.n_rbf / self.cutoff) ** 2
+        env = 0.5 * (jnp.cos(jnp.pi * jnp.clip(dist / self.cutoff, 0, 1)) + 1.0)
+        return jnp.exp(-gamma * (dist[..., None] - centers) ** 2) * env[..., None]
+
+    def _split(self, h):
+        """flat (..., width) -> {l: (..., mul, 2l+1)}"""
+        return {l: h[..., _l_slice(l, self.mul)].reshape(
+                    h.shape[:-1] + (self.mul, 2 * l + 1))
+                for l in range(self.l_max + 1)}
+
+    def _flat(self, parts):
+        return jnp.concatenate(
+            [parts[l].reshape(parts[l].shape[:-2] + (-1,))
+             for l in range(self.l_max + 1)], axis=-1)
+
+    def apply(self, params, block, x, comm):
+        p0 = x.shape[0]
+        scal = nn.linear(params["embed"], x)                     # (P, n, mul)
+        h = jnp.concatenate(
+            [scal, jnp.zeros(scal.shape[:-1] + (self.width - self.mul,))], -1)
+        dist = block.edge_attr[..., 0]
+        sh = block.edge_attr[..., 4:4 + (self.l_max + 1) ** 2]   # (P, E, 9)
+        rbf = self._rbf(dist)
+        paths = self.paths
+        for i in range(self.n_layers):
+            lp = params[f"layer{i}"]
+            table = B.halo_table(h, comm.halo(h))
+            src = B.gather_src(block, table)                     # (P, E, width)
+            src_l = self._split(src)
+            w = nn.mlp(lp["radial"], rbf, act=jax.nn.silu)
+            w = w.reshape(w.shape[:-1] + (len(paths), self.mul)) # (P,E,paths,mul)
+            msg = {l: 0.0 for l in range(self.l_max + 1)}
+            for pi, (l1, l2, l3) in enumerate(paths):
+                c = jnp.asarray(so3.gaunt(l1, l2, l3))
+                y2 = sh[..., so3.sh_slice(l2)]
+                m = jnp.einsum("abc,peua,peb->peuc", c, src_l[l1], y2)
+                msg[l3] = msg[l3] + m * w[..., pi, :, None]
+            agg = {l: B.agg_sum(block, msg[l].reshape(msg[l].shape[:2] + (-1,)))
+                      .reshape((p0, block.n_local, self.mul, 2 * l + 1))
+                   for l in range(self.l_max + 1)}
+            h_l = self._split(h)
+            out = {l: jnp.einsum("pnum,uv->pnvm", agg[l], lp["w_agg"][l])
+                      + jnp.einsum("pnum,uv->pnvm", h_l[l], lp["w_self"][l])
+                   for l in range(self.l_max + 1)}
+            scal = jax.nn.silu(out[0][..., 0])                    # (P, n, mul)
+            gates = jax.nn.sigmoid(nn.linear(lp["gate"], scal))
+            gated = {0: scal[..., None]}
+            for l in range(1, self.l_max + 1):
+                g = gates[..., (l - 1) * self.mul: l * self.mul]
+                gated[l] = out[l] * g[..., None]
+            h = self._flat(gated)
+        return nn.linear(params["out"], h[..., :self.mul])

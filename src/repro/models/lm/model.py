@@ -1,0 +1,661 @@
+"""Transformer LM covering all five assigned architectures.
+
+One parameterized stack expresses:
+  * granite-3-2b / yi-34b     — GQA + RoPE, gated-SiLU FFN
+  * gemma2-27b                — alternating local(window 4096)/global layers,
+                                attn-logit + final-logit softcaps, sandwich norms
+  * olmoe-1b-7b               — GQA + MoE (64 experts, top-8)
+  * deepseek-v2-236b          — MLA (kv_lora 512, decoupled RoPE) + MoE
+                                (2 shared + 160 routed, top-6)
+
+Layers are ``lax.scan``'d per segment (stacked params, leading ``count`` axis)
+with a remat policy, so HLO size is O(#distinct sub-layers), not O(depth).
+
+Attention is *online-softmax blockwise* over KV chunks (Rabe-Staats): scores
+are never materialized at (S, S) — required for the 32k-prefill cells to fit
+HBM, and the memory-roofline-friendly form on TPU. Decode keeps a KV cache
+(ring-buffered at ``window`` for local layers) and runs one-token attention
+over the cache; with the cache sequence-sharded this is exactly the
+flash-decoding parallel split (partial max/sum + all-reduce), which GSPMD
+derives from the shardings.
+
+MoE uses capacity-based scatter dispatch (tokens -> (E, C, d) buffers ->
+per-expert GEMMs -> combine), so compiled FLOPs track *active* parameters —
+the dense-compute shortcut would inflate HLO_FLOPs by E/top_k and wreck the
+MODEL_FLOPS/HLO_FLOPs ratio the roofline reports.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec
+
+from .config import AttnConfig, LayerConfig, LMConfig, MoEConfig
+
+# ---------------------------------------------------------------------------
+# sharding context: explicit activation annotations (GSPMD alone mis-places
+# the batch axis in the attention scan — see EXPERIMENTS.md §Perf iteration 1)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    dp: tuple          # data-parallel axes, e.g. ("data",) or ("pod", "data")
+    mdl: str           # tensor-parallel axis
+    mdl_size: int
+
+    def head(self, n: int):
+        """The model axis iff it divides the head count, else unsharded."""
+        return self.mdl if n % self.mdl_size == 0 else None
+
+
+_CTX: Optional[ShardCtx] = None
+
+
+def set_shard_ctx(ctx: Optional[ShardCtx]):
+    """Set by the distributed launchers before tracing; None (default) keeps
+    single-device smoke tests annotation-free."""
+    global _CTX
+    _CTX = ctx
+
+
+def shard_ctx_from_mesh(mesh) -> ShardCtx:
+    dp = tuple(n for n in mesh.axis_names if n != "model")
+    return ShardCtx(dp=dp, mdl="model", mdl_size=mesh.shape["model"])
+
+
+def _cst(x, *spec):
+    if _CTX is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, PartitionSpec(*spec))
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def _init(key, shape, scale_axis=0, dtype=jnp.bfloat16):
+    scale = 1.0 / np.sqrt(max(1, shape[scale_axis]))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def rms_norm(x, gamma, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), -1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)).astype(x.dtype) \
+        * (1.0 + gamma.astype(x.dtype))
+
+
+def rope(x, positions, theta):
+    """x: (..., S, H, D); positions: (..., S)."""
+    d = x.shape[-1]
+    freqs = theta ** (-jnp.arange(0, d, 2, dtype=jnp.float32) / d)
+    ang = positions[..., None].astype(jnp.float32) * freqs      # (..., S, D/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., : d // 2], x[..., d // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def _softcap(x, cap):
+    return cap * jnp.tanh(x / cap) if cap else x
+
+
+# ---------------------------------------------------------------------------
+# blockwise attention (shared by all attn kinds once q/k/v are formed)
+# ---------------------------------------------------------------------------
+NEG = -2.0e38
+
+# §Perf iteration flag: remat the KV-block scan step so backward recomputes
+# the per-block score tensor instead of saving all nb f32 logits blocks
+# (flash-attention's memory behavior without the kernel). CONFIRMED in §Perf
+# (granite train memory term -10.5%, compute +0.7%) and promoted to default.
+_ATTN_SCAN_REMAT = True
+
+
+def set_attn_scan_remat(on: bool):
+    global _ATTN_SCAN_REMAT
+    _ATTN_SCAN_REMAT = on
+
+
+def blockwise_attention(q, k, v, *, causal: bool, window: Optional[int],
+                        softcap: Optional[float], q_offset, kv_len: int,
+                        block: int = 1024, scale: float = 1.0):
+    """Online-softmax attention, expanded-head form.
+
+    q: (B, Sq, H, D); k/v: (B, Skv, Hkv, D|Dv). KV heads are repeated to H
+    *inside* each block step, so every score/accumulator tensor carries a
+    plain head axis that shards cleanly over the model axis (GQA's folded
+    (Hkv, G) axes do not — GSPMD then replicates the scores; §Perf it. 1).
+    Supports causal masking at absolute positions (q position = q_offset+i),
+    sliding window, logit softcap. Scans KV blocks carrying running
+    (max, sum, acc) — O(Sq x block) live scores.
+    """
+    b, sq, h, d = q.shape
+    _, skv, hkv, dv = v.shape
+    g = h // hkv
+    q = q * scale
+    nb = (skv + block - 1) // block
+    pad = nb * block - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(b, nb, block, hkv, d)
+    vb = v.reshape(b, nb, block, hkv, dv)
+    q_pos = q_offset + jnp.arange(sq)
+    dp = _CTX.dp if _CTX else None
+    hsp = _CTX.head(h) if _CTX else None
+
+    def step(carry, blk):
+        m, s, acc = carry
+        kc, vc, j = blk
+        kv_pos = j * block + jnp.arange(block)
+        if g > 1:
+            kc = jnp.repeat(kc, g, axis=2)           # (b, blk, H, d)
+            vc = jnp.repeat(vc, g, axis=2)
+        kc = _cst(kc, dp, None, hsp, None)
+        vc = _cst(vc, dp, None, hsp, None)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q, kc,
+                            preferred_element_type=jnp.float32)
+        logits = _softcap(logits, softcap)
+        logits = _cst(logits, dp, hsp, None, None)
+        mask = kv_pos[None, :] < kv_len
+        if causal:
+            mask = mask & (kv_pos[None, :] <= q_pos[:, None])
+        if window is not None:
+            mask = mask & (q_pos[:, None] - kv_pos[None, :] < window)
+        logits = jnp.where(mask[None, None], logits, NEG)
+        m_new = jnp.maximum(m, logits.max(-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        s_new = s * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(vc.dtype), vc,
+            preferred_element_type=jnp.float32)
+        acc_new = _cst(acc_new, dp, hsp, None, None)
+        return (m_new, s_new, acc_new), None
+
+    m0 = _cst(jnp.full((b, h, sq), NEG, jnp.float32), dp, hsp, None)
+    s0 = _cst(jnp.zeros((b, h, sq), jnp.float32), dp, hsp, None)
+    a0 = _cst(jnp.zeros((b, h, sq, dv), jnp.float32), dp, hsp, None, None)
+    if nb == 1:
+        (m, s, acc), _ = step((m0, s0, a0), (kb[:, 0], vb[:, 0], 0))
+    else:
+        body = jax.checkpoint(step) if _ATTN_SCAN_REMAT else step
+        (m, s, acc), _ = jax.lax.scan(
+            body, (m0, s0, a0),
+            (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0), jnp.arange(nb)))
+    out = acc / jnp.maximum(s[..., None], 1e-30)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def decode_attention(q, k, v, *, softcap, kv_len, scale: float = 1.0):
+    """One-token attention over the full cache. q: (B, 1, H, D);
+    k/v: (B, S, Hkv, D|Dv). Positions beyond ``kv_len`` are masked. When the
+    cache S axis is sharded, XLA lowers the max/sum reductions to partial
+    reduce + all-reduce — the flash-decoding split."""
+    b, _, h, d = q.shape
+    _, s, hkv, dv = v.shape
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, d) * scale
+    logits = jnp.einsum("bhgd,bkhd->bhgk", qg, k,
+                        preferred_element_type=jnp.float32)
+    logits = _softcap(logits, softcap)
+    mask = jnp.arange(s)[None, :] < kv_len
+    logits = jnp.where(mask[:, None, None], logits, NEG)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, dv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# sub-layer parameter init
+# ---------------------------------------------------------------------------
+
+
+def attn_params(key, cfg: LMConfig, a: AttnConfig, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    if a.kind == "mla":
+        p = {"kv_a": _init(ks[0], (d, a.kv_lora + a.d_rope), 0, dtype),
+             "kv_norm": jnp.zeros((a.kv_lora,), dtype),
+             "kv_b": _init(ks[1], (a.kv_lora, a.n_heads * (a.d_nope + a.d_v)),
+                           0, dtype),
+             "wo": _init(ks[2], (a.n_heads * a.d_v, d), 0, dtype)}
+        if a.q_lora:
+            p["q_a"] = _init(ks[3], (d, a.q_lora), 0, dtype)
+            p["q_norm"] = jnp.zeros((a.q_lora,), dtype)
+            p["q_b"] = _init(ks[4], (a.q_lora, a.q_out), 0, dtype)
+        else:
+            p["wq"] = _init(ks[4], (d, a.q_out), 0, dtype)
+        return p
+    return {"wq": _init(ks[0], (d, a.n_heads * a.d_head), 0, dtype),
+            "wk": _init(ks[1], (d, a.n_kv_heads * a.d_head), 0, dtype),
+            "wv": _init(ks[2], (d, a.n_kv_heads * a.d_head), 0, dtype),
+            "wo": _init(ks[3], (a.n_heads * a.d_head, d), 0, dtype)}
+
+
+def ffn_params(key, cfg: LMConfig, lc: LayerConfig, dtype):
+    d = cfg.d_model
+    if lc.moe is None:
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {"gate": _init(k1, (d, lc.d_ff), 0, dtype),
+                "up": _init(k2, (d, lc.d_ff), 0, dtype),
+                "down": _init(k3, (lc.d_ff, d), 0, dtype)}
+    m = lc.moe
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    p = {"router": _init(k1, (d, m.n_experts), 0, jnp.float32),
+         "e_gate": _init(k2, (m.n_experts, d, m.d_ff), 1, dtype),
+         "e_up": _init(k3, (m.n_experts, d, m.d_ff), 1, dtype),
+         "e_down": _init(k4, (m.n_experts, m.d_ff, d), 1, dtype)}
+    if m.n_shared:
+        ks1, ks2, ks3 = jax.random.split(k5, 3)
+        p["shared"] = {"gate": _init(ks1, (d, m.d_ff_shared), 0, dtype),
+                       "up": _init(ks2, (d, m.d_ff_shared), 0, dtype),
+                       "down": _init(ks3, (m.d_ff_shared, d), 0, dtype)}
+    return p
+
+
+def layer_params(key, cfg: LMConfig, lc: LayerConfig, dtype):
+    ka, kf = jax.random.split(key)
+    d = cfg.d_model
+    p = {"attn": attn_params(ka, cfg, lc.attn, dtype),
+         "ffn": ffn_params(kf, cfg, lc, dtype),
+         "ln_attn": jnp.zeros((d,), dtype),
+         "ln_ffn": jnp.zeros((d,), dtype)}
+    if lc.post_norm:
+        p["ln_attn_post"] = jnp.zeros((d,), dtype)
+        p["ln_ffn_post"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def init_params(key, cfg: LMConfig, dtype=jnp.bfloat16):
+    """Stacked per-segment params: segments[i] has leading axis ``count``."""
+    ke, kf, key = jax.random.split(key, 3)
+    params: dict[str, Any] = {
+        "embed": _init(ke, (cfg.vocab_padded, cfg.d_model), 1, dtype),
+        "ln_final": jnp.zeros((cfg.d_model,), dtype)}
+    if not cfg.tie_embeddings:
+        params["unembed"] = _init(kf, (cfg.d_model, cfg.vocab_padded), 0, dtype)
+    for si, seg in enumerate(cfg.segments):
+        def make(i, si=si, seg=seg):
+            k = jax.random.fold_in(key, si * 1000 + i)
+            return {f"sub{li}": layer_params(jax.random.fold_in(k, li), cfg, lc,
+                                             dtype)
+                    for li, lc in enumerate(seg.layers)}
+        params[f"seg{si}"] = jax.vmap(make)(jnp.arange(seg.count))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# MoE dispatch (capacity scatter)
+# ---------------------------------------------------------------------------
+
+
+MOE_GROUP = 8192          # dispatch-group length in token-assignments
+
+
+def moe_ffn(p, x, m: MoEConfig, capacity: Optional[int] = None):
+    """x: (T, d) -> (T, d). Grouped capacity dispatch:
+
+    Assignments are split into fixed-length groups with per-group capacity
+    (like per-rank dispatch in real expert-parallel systems; group boundaries
+    are token-count-determined, so semantics do not depend on the mesh). The
+    rank-within-expert uses a log-depth ``associative_scan`` over the group —
+    a naive ``cumsum`` over all T*k assignments lowers to an O(n^2)
+    reduce-window AND serializes across data shards (§Perf iteration 2:
+    396 TFLOP/device of dispatch overhead at deepseek scale, ~0 after).
+    """
+    t, d = x.shape
+    # router matmul in the stream dtype (bf16), softmax in f32 — upcasting
+    # the whole (T, d) stream to f32 costs a full extra pass over it
+    logits = (x @ p["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, -1)
+    gate_w, gate_i = jax.lax.top_k(probs, m.top_k)              # (T, k)
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    n_assign = t * m.top_k
+    gl = min(MOE_GROUP, n_assign)                               # group length
+    ng = (n_assign + gl - 1) // gl
+    pad = ng * gl - n_assign
+    c = capacity or int(m.capacity_factor * gl / m.n_experts + 1)
+
+    e_flat = gate_i.reshape(-1)                                 # (T*k,)
+    if pad:
+        e_flat = jnp.pad(e_flat, (0, pad), constant_values=m.n_experts - 1)
+    dp = _CTX.dp if _CTX else None
+    e_g = _cst(e_flat.reshape(ng, gl), dp, None)
+    oh = jax.nn.one_hot(e_g, m.n_experts, dtype=jnp.int32)      # (G, L, E)
+    oh = _cst(oh, dp, None, None)                    # groups follow the batch
+    pos = jax.lax.associative_scan(jnp.add, oh, axis=1) - oh
+    pos = jnp.take_along_axis(pos, e_g[..., None], 2)[..., 0]   # (G, L)
+    keep = pos < c
+    if pad:
+        keep = keep.reshape(-1).at[n_assign:].set(False).reshape(ng, gl)
+    slot = jnp.where(keep, pos, 0)
+
+    # token -> assignment expansion is STRUCTURED (each token's k assignments
+    # are contiguous): jnp.repeat, not x[src] — a dynamic gather with global
+    # indices makes GSPMD all-reduce (T*k, d)-sized tensors across the mesh
+    # every layer because it cannot prove shard alignment (§Perf A4).
+    x_rep = jnp.repeat(x, m.top_k, axis=0)                      # (T*k, d)
+    if pad:
+        x_rep = jnp.pad(x_rep, ((0, pad), (0, 0)))
+    vals = jnp.where(keep.reshape(-1)[:, None], x_rep, 0).reshape(ng, gl, d)
+    vals = _cst(vals, dp, None, None)
+    # batched (vmap'd) segment-sum: the group axis becomes an explicit scatter
+    # batching dim, so the scatter stays group-local under the dp sharding
+    # (a triple-indexed .at[g, e, c].add makes GSPMD all-reduce partial
+    # buffers across the mesh — §Perf A5)
+    flat_idx = e_g * c + slot                                   # (G, L)
+    buf = jax.vmap(partial(jax.ops.segment_sum,
+                           num_segments=m.n_experts * c))(vals, flat_idx)
+    buf = buf.reshape(ng, m.n_experts, c, d)
+
+    # Tokens-stay-put dispatch (§Perf A2, confirmed): the buffer shards only
+    # on the batch-aligned group axis, so the scatter is shard-LOCAL (no
+    # collective at all); the expert weights all-gather over the model axis
+    # instead — orders of magnitude fewer bytes than moving token buffers
+    # (A1's 2-D sharding and the E-sharded baseline both made GSPMD
+    # all-reduce whole dispatch buffers across dp: 1.4-12.9 TB/device wire).
+    buf = _cst(buf, dp, None, None, None)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, p["e_gate"])) \
+        * jnp.einsum("gecd,edf->gecf", buf, p["e_up"])
+    h = _cst(h, dp, None, None, None)
+    out_e = _cst(jnp.einsum("gecf,efd->gecd", h, p["e_down"]),
+                 dp, None, None, None)
+
+    out_flat = out_e.reshape(ng, m.n_experts * c, d)
+    back = jax.vmap(lambda o, i: jnp.take(o, i, axis=0))(out_flat, flat_idx)
+    back = jnp.where(keep.reshape(-1)[:, None], back.reshape(-1, d),
+                     0)[:n_assign]
+    w_flat = gate_w.reshape(-1, 1).astype(back.dtype)
+    # assignment -> token combine is a reshape+sum (contiguous k), not a
+    # scatter-add over global indices (§Perf A4)
+    y = (back * w_flat).reshape(t, m.top_k, d).sum(1)
+
+    # auxiliary load-balance loss (Switch-style), returned for the trainer
+    me = probs.mean(0)
+    ce = jax.nn.one_hot(gate_i, m.n_experts,
+                        dtype=jnp.float32).sum(1).mean(0)
+    aux = m.n_experts * jnp.sum(me * ce)
+    if m.n_shared:
+        sp = p["shared"]
+        y = y + (jax.nn.silu(x @ sp["gate"]) * (x @ sp["up"])) @ sp["down"]
+    return y.astype(x.dtype), aux
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _attn_forward(p, x, a: AttnConfig, cfg: LMConfig, *, positions, kv_len,
+                  cache=None, cache_pos=None):
+    """Returns (attn_out, new_cache_entry). Cache entry layout:
+    GQA: {"k": (B, S, Hkv, D), "v": ...}; MLA: {"ckv": (B, S, kv_lora+d_rope)}.
+    """
+    b, s, d = x.shape
+    decode = cache is not None and s == 1
+    if a.kind == "mla":
+        if a.q_lora:
+            q = rms_norm(x @ p["q_a"], p["q_norm"], cfg.norm_eps) @ p["q_b"]
+        else:
+            q = x @ p["wq"]
+        q = q.reshape(b, s, a.n_heads, a.d_nope + a.d_rope)
+        if _CTX:
+            q = _cst(q, _CTX.dp, None, _CTX.head(a.n_heads), None)
+        q_nope, q_rope = q[..., :a.d_nope], q[..., a.d_nope:]
+        q_rope = rope(q_rope, positions, a.rope_theta)
+        ckv_new = x @ p["kv_a"]                                  # (B,S,lora+dr)
+        k_rope_new = rope(ckv_new[..., a.kv_lora:][:, :, None, :], positions,
+                          a.rope_theta)[:, :, 0, :]
+        ckv_new = jnp.concatenate([ckv_new[..., :a.kv_lora], k_rope_new], -1)
+        if cache is not None:
+            cache_upd = jax.lax.dynamic_update_slice(
+                cache["ckv"], ckv_new.astype(cache["ckv"].dtype),
+                (0, cache_pos, 0))
+            ckv = cache_upd if decode else ckv_new
+        else:
+            cache_upd = ckv = ckv_new
+        c_lat = rms_norm(ckv[..., :a.kv_lora], p["kv_norm"], cfg.norm_eps)
+        kv = c_lat @ p["kv_b"]
+        kv = kv.reshape(b, -1, a.n_heads, a.d_nope + a.d_v)
+        if _CTX:
+            kv = _cst(kv, _CTX.dp, None, _CTX.head(a.n_heads), None)
+        k_nope, v = kv[..., :a.d_nope], kv[..., a.d_nope:]
+        k_rope = jnp.broadcast_to(ckv[..., None, a.kv_lora:],
+                                  k_nope.shape[:-1] + (a.d_rope,))
+        k = jnp.concatenate([k_nope, k_rope], -1)
+        qf = jnp.concatenate([q_nope, q_rope], -1)
+        scale = 1.0 / np.sqrt(a.d_nope + a.d_rope)
+        if decode:
+            o = decode_attention(qf, k, v, softcap=a.softcap, kv_len=kv_len,
+                                 scale=scale)
+        else:
+            o = blockwise_attention(qf, k, v, causal=True, window=a.window,
+                                    softcap=a.softcap, q_offset=0,
+                                    kv_len=kv_len, scale=scale)
+        out = o.reshape(b, s, -1) @ p["wo"]
+        return out, {"ckv": cache_upd}
+
+    dp = _CTX.dp if _CTX else None
+    q = (x @ p["wq"]).reshape(b, s, a.n_heads, a.d_head)
+    q = _cst(q, dp, None, _CTX.head(a.n_heads) if _CTX else None, None)
+    k_new = (x @ p["wk"]).reshape(b, s, a.n_kv_heads, a.d_head)
+    v_new = (x @ p["wv"]).reshape(b, s, a.n_kv_heads, a.d_head)
+    q = rope(q, positions, a.rope_theta)
+    k_new = rope(k_new, positions, a.rope_theta)
+    if cache is not None:
+        cs = cache["k"].shape[1]
+        cdt = cache["k"].dtype
+        if decode:
+            slot = cache_pos % cs if a.window else cache_pos
+            kc = jax.lax.dynamic_update_slice(
+                cache["k"], k_new.astype(cdt), (0, slot, 0, 0))
+            vc = jax.lax.dynamic_update_slice(
+                cache["v"], v_new.astype(cdt), (0, slot, 0, 0))
+            k, v = kc, vc
+        elif s >= cs:
+            # prefill overflowing a ring (windowed) cache: keep the last ``cs``
+            # tokens, rotated so token p lands in slot p % cs.
+            shift = (cache_pos + s) % cs
+            kc = jnp.roll(k_new[:, -cs:], shift, axis=1).astype(cdt)
+            vc = jnp.roll(v_new[:, -cs:], shift, axis=1).astype(cdt)
+            k, v = k_new, v_new
+        else:
+            kc = jax.lax.dynamic_update_slice(
+                cache["k"], k_new.astype(cdt), (0, cache_pos, 0, 0))
+            vc = jax.lax.dynamic_update_slice(
+                cache["v"], v_new.astype(cdt), (0, cache_pos, 0, 0))
+            k, v = k_new, v_new
+    else:
+        kc = vc = None
+        k, v = k_new, v_new
+    scale = 1.0 / np.sqrt(a.d_head)
+    if decode:
+        o = decode_attention(q, k, v, softcap=a.softcap,
+                             kv_len=jnp.minimum(kv_len, k.shape[1]),
+                             scale=scale)
+    else:
+        o = blockwise_attention(q, k, v, causal=True, window=a.window,
+                                softcap=a.softcap, q_offset=0, kv_len=kv_len,
+                                scale=scale)
+    out = o.reshape(b, s, -1) @ p["wo"]
+    return out, ({"k": kc, "v": vc} if cache is not None
+                 else {"k": k_new, "v": v_new})
+
+
+def _sub_layer(p, x, lc: LayerConfig, cfg: LMConfig, *, positions, kv_len,
+               cache=None, cache_pos=None):
+    dtype = x.dtype
+    dp = _CTX.dp if _CTX else None
+    h = rms_norm(x, p["ln_attn"], cfg.norm_eps)
+    h, new_cache = _attn_forward(p["attn"], h, lc.attn, cfg,
+                                 positions=positions, kv_len=kv_len,
+                                 cache=cache, cache_pos=cache_pos)
+    if lc.post_norm:
+        h = rms_norm(h, p["ln_attn_post"], cfg.norm_eps)
+    x = _cst((x + h).astype(dtype), dp, None, None)
+    h = rms_norm(x, p["ln_ffn"], cfg.norm_eps)
+    aux = 0.0
+    if lc.moe is not None:
+        b, s, d = h.shape
+        h2, aux = moe_ffn(p["ffn"], h.reshape(-1, d), lc.moe)
+        h = h2.reshape(b, s, d)
+    else:
+        f = p["ffn"]
+        hid = _cst(jax.nn.silu(h @ f["gate"]) * (h @ f["up"]),
+                   dp, None, _CTX.mdl if _CTX else None)
+        h = hid @ f["down"]
+    if lc.post_norm:
+        h = rms_norm(h, p["ln_ffn_post"], cfg.norm_eps)
+    return _cst((x + h).astype(dtype), dp, None, None), aux, new_cache
+
+
+def forward(params, tokens, cfg: LMConfig, *, positions=None, kv_len=None,
+            caches=None, cache_pos=None, remat: bool = True,
+            unroll: bool = False):
+    """tokens (B, S) -> logits (B, S, V). ``caches``: per-segment pytrees with
+    leading ``count`` axis (present => fill/update them).
+
+    ``unroll=True`` fully unrolls the layer scans — used by the dry-run so
+    XLA cost analysis counts every layer's FLOPs and collectives (it tallies
+    a ``while`` body once, not x trip-count)."""
+    b, s = tokens.shape
+    dtype = params["embed"].dtype
+    x = params["embed"][tokens]
+    x = _cst(x, _CTX.dp if _CTX else None, None, None)
+    if cfg.embed_scale:
+        x = x * np.asarray(np.sqrt(cfg.d_model), dtype)
+    if positions is None:
+        positions = jnp.arange(s)
+    if kv_len is None:
+        kv_len = s
+    total_aux = 0.0
+    new_caches = {} if caches is not None else None
+
+    for si, seg in enumerate(cfg.segments):
+        seg_p = params[f"seg{si}"]
+        seg_cache = caches.get(f"seg{si}") if caches is not None else None
+
+        def body(x, inp, seg=seg):
+            p_i, cache_i = inp
+            aux_i = 0.0
+            new_cache_i = {}
+            for li, lc in enumerate(seg.layers):
+                x, aux, nc = _sub_layer(
+                    p_i[f"sub{li}"], x, lc, cfg, positions=positions,
+                    kv_len=kv_len,
+                    cache=None if cache_i is None else cache_i[f"sub{li}"],
+                    cache_pos=cache_pos)
+                aux_i = aux_i + aux
+                new_cache_i[f"sub{li}"] = nc
+            return x, (aux_i, new_cache_i)
+
+        if remat:
+            body = jax.checkpoint(body,
+                                  policy=jax.checkpoint_policies.nothing_saveable)
+        x, (auxs, ncs) = jax.lax.scan(body, x, (seg_p, seg_cache),
+                                      unroll=seg.count if unroll else 1)
+        total_aux = total_aux + jnp.sum(auxs)
+        if new_caches is not None:
+            new_caches[f"seg{si}"] = ncs
+
+    x = rms_norm(x, params["ln_final"], cfg.norm_eps)
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = x @ unembed
+    logits = _cst(logits, _CTX.dp if _CTX else None, None,
+                  _CTX.mdl if _CTX else None)        # vocab-sharded logits
+    if cfg.vocab_padded != cfg.vocab:
+        logits = logits[..., :cfg.vocab]             # drop padded entries
+    logits = _softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+    return logits, total_aux, new_caches
+
+
+# ---------------------------------------------------------------------------
+# cache construction
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: LMConfig, batch: int, seq: int, dtype=jnp.bfloat16,
+               as_spec: bool = False):
+    """Per-segment stacked KV caches. Local (windowed) layers ring-buffer at
+    ``window`` instead of ``seq`` — the Gemma-2 memory saving."""
+    def make(shape):
+        return (jax.ShapeDtypeStruct(shape, dtype) if as_spec
+                else jnp.zeros(shape, dtype))
+
+    caches = {}
+    for si, seg in enumerate(cfg.segments):
+        sub = {}
+        for li, lc in enumerate(seg.layers):
+            a = lc.attn
+            s_eff = min(seq, a.window) if a.window else seq
+            if a.kind == "mla":
+                sub[f"sub{li}"] = {"ckv": make(
+                    (seg.count, batch, s_eff, a.kv_lora + a.d_rope))}
+            else:
+                sub[f"sub{li}"] = {
+                    "k": make((seg.count, batch, s_eff, a.n_kv_heads, a.d_head)),
+                    "v": make((seg.count, batch, s_eff, a.n_kv_heads, a.d_head))}
+        caches[f"seg{si}"] = sub
+    return caches
+
+
+# ---------------------------------------------------------------------------
+# train / serve steps
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(params, tokens, labels, cfg: LMConfig, unroll: bool = False):
+    """CE over vocab-sharded padded logits. The label log-prob is picked out
+    with an iota-compare + max reduce (not take_along_axis, whose gather
+    would force an all-gather of the full logits over the model axis); the
+    logsumexp ignores padded vocab entries via the same mask."""
+    logits, aux, _ = forward(params, tokens, cfg, unroll=unroll)
+    vp = logits.shape[-1]
+    valid = jnp.arange(vp) < cfg.vocab
+    logits = jnp.where(valid, logits, NEG)
+    logz = jax.nn.logsumexp(logits, -1)
+    is_label = jnp.arange(vp)[None, None, :] == labels[..., None]
+    ll = jnp.max(jnp.where(is_label, logits, NEG), -1)
+    return (logz - ll).mean() + 0.01 * aux
+
+
+def make_train_step(cfg: LMConfig, optimizer, unroll: bool = False):
+    def train_step(state, tokens, labels):
+        params, opt_state, step = state
+        loss, grads = jax.value_and_grad(lm_loss)(params, tokens, labels, cfg,
+                                                  unroll)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        from ...train.optimizer import apply_updates
+        params = apply_updates(params, updates)
+        return (params, opt_state, step + 1), loss
+    return train_step
+
+
+def make_prefill_step(cfg: LMConfig, batch: int, seq: int,
+                      unroll: bool = False):
+    def prefill(params, tokens):
+        caches = init_cache(cfg, batch, seq)
+        logits, _, caches = forward(params, tokens, cfg, caches=caches,
+                                    cache_pos=0, kv_len=seq, unroll=unroll)
+        return logits[:, -1], caches
+    return prefill
+
+
+def make_decode_step(cfg: LMConfig, unroll: bool = False):
+    def decode(params, caches, token, pos):
+        """token (B, 1) int32; pos scalar int32 (current length)."""
+        logits, _, caches = forward(
+            params, token, cfg, positions=pos[None], kv_len=pos + 1,
+            caches=caches, cache_pos=pos, remat=False, unroll=unroll)
+        return logits[:, 0], caches
+    return decode

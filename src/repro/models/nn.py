@@ -1,0 +1,73 @@
+"""Minimal pure-JAX NN layer library (params = nested dicts; init/apply fns).
+
+No flax/haiku dependency — keeps the distributed runtime's pytree handling
+transparent (sharding specs mirror the param tree 1:1).
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def glorot(key, shape, dtype=jnp.float32):
+    fan_in, fan_out = shape[-2], shape[-1]
+    lim = math.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(key, shape, dtype, -lim, lim)
+
+
+def linear_init(key, d_in, d_out, bias=True, dtype=jnp.float32):
+    p = {"w": glorot(key, (d_in, d_out), dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p, x):
+    y = x @ p["w"]
+    return y + p["b"] if "b" in p else y
+
+
+def mlp_init(key, dims: Sequence[int], bias=True, dtype=jnp.float32):
+    keys = jax.random.split(key, len(dims) - 1)
+    return {f"l{i}": linear_init(keys[i], dims[i], dims[i + 1], bias, dtype)
+            for i in range(len(dims) - 1)}
+
+
+def mlp(p, x, act=jax.nn.relu, final_act=None):
+    n = len(p)
+    for i in range(n):
+        x = linear(p[f"l{i}"], x)
+        if i < n - 1:
+            x = act(x)
+        elif final_act is not None:
+            x = final_act(x)
+    return x
+
+
+def layer_norm(x, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps)
+
+
+def rms_norm(x, gamma=None, eps=1e-6):
+    var = (x.astype(jnp.float32) ** 2).mean(-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return y if gamma is None else y * gamma
+
+
+def cross_entropy(logits, labels, mask):
+    """Masked mean CE. Returns (sum_loss, count) so callers can psum across shards."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None].astype(jnp.int32),
+                             axis=-1)[..., 0]
+    ce = (logz - ll) * mask
+    return ce.sum(), mask.sum()
+
+
+def accuracy_counts(logits, labels, mask):
+    pred = jnp.argmax(logits, axis=-1)
+    return ((pred == labels) * mask).sum(), mask.sum()

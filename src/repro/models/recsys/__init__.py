@@ -1,0 +1,1 @@
+from . import dlrm  # noqa: F401

@@ -1,0 +1,1 @@
+from . import gnn_step, optimizer  # noqa: F401

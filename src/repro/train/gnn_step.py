@@ -1,0 +1,113 @@
+"""Step functions for distributed full-graph GNN training (the paper's Trainer).
+
+Three step flavors over one :class:`GNNTrainState`:
+
+* ``train_step_sync``  — vanilla (bits=32) or Sylvie-S. Fresh quantized exchange
+  both passes; also refreshes the Sylvie-A feature caches (the Bounded Staleness
+  Adaptor runs exactly this step every ``eps_s`` epochs) and *drains* the grad
+  caches (a synchronous epoch leaves no in-flight boundary gradients).
+* ``train_step_async`` — Sylvie-A: consumes cached halo features/gradients,
+  emits fresh caches for the next step.
+* ``eval_step``        — full-precision synchronous exchange (accuracy metric).
+
+Weight gradients are all-reduced across partitions (Alg. 2 line 16): explicit
+``lax.psum`` under shard_map; implicit via the stacked-axis contraction in the
+simulated mode.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.staleness import HaloState
+from ..core.sylvie import SylvieComm, SylvieConfig
+from ..models import nn
+from . import optimizer as optlib
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class GNNTrainState:
+    params: dict
+    opt_state: dict
+    halo: HaloState
+    step: jax.Array
+
+    @staticmethod
+    def create(model, opt, key, plan, stacked_parts=None):
+        params = model.init(key)
+        return GNNTrainState(
+            params=params, opt_state=opt.init(params),
+            halo=HaloState.zeros(plan, model.comm_dims(),
+                                 stacked_parts=stacked_parts),
+            step=jnp.zeros((), jnp.int32))
+
+
+def _psum(x, axis):
+    return jax.lax.psum(x, axis) if axis is not None else x
+
+
+def _masked_loss(logits, y, mask, axis):
+    s, c = nn.cross_entropy(logits, y, mask.astype(jnp.float32))
+    return _psum(s, axis) / jnp.maximum(_psum(c, axis), 1.0)
+
+
+def make_gnn_steps(model, cfg: SylvieConfig, opt: optlib.Optimizer,
+                   clip_norm: Optional[float] = None):
+    """Builds (train_step_sync, train_step_async, eval_step). All three are pure
+    and jit/shard_map-compatible; the caller decides which to invoke per epoch
+    (Bounded Staleness Adaptor — core/staleness.use_sync_step)."""
+    axis = cfg.axis_name
+    sync_cfg = cfg if cfg.mode != "async" else cfg.replace(mode="sync")
+    async_cfg = cfg.replace(mode="async")
+
+    def _finish(state, params_grads, loss, new_halo):
+        if clip_norm is not None:
+            params_grads, _ = optlib.clip_by_global_norm(params_grads, clip_norm)
+        updates, new_opt = opt.update(params_grads, state.opt_state, state.params)
+        new_params = optlib.apply_updates(state.params, updates)
+        return GNNTrainState(new_params, new_opt, new_halo, state.step + 1), loss
+
+    def train_step_sync(state: GNNTrainState, block, x, y, mask, key):
+        def loss_fn(params):
+            comm = SylvieComm(sync_cfg, block.plan, key)
+            logits = model.apply(params, block, x, comm)
+            loss = _masked_loss(logits, y, mask, axis)
+            caches = tuple(jax.lax.stop_gradient(c) for c in comm.new_feat_caches)
+            return loss, caches
+
+        # NB: no explicit grad psum — under shard_map(check_vma=True) the
+        # cotangent of the replicated params is reduced at the boundary
+        # (Alg. 2 line 16's all-reduce); simulated mode is already global.
+        (loss, caches), grads = jax.value_and_grad(loss_fn, has_aux=True)(state.params)
+        new_halo = HaloState(feats=caches,
+                             grads=tuple(jnp.zeros_like(f) for f in caches))
+        return _finish(state, grads, loss, new_halo)
+
+    def train_step_async(state: GNNTrainState, block, x, y, mask, key):
+        def loss_fn(params, gslots):
+            comm = SylvieComm(async_cfg, block.plan, key,
+                              feat_caches=state.halo.feats,
+                              grad_ins=state.halo.grads, gslots=gslots)
+            logits = model.apply(params, block, x, comm)
+            loss = _masked_loss(logits, y, mask, axis)
+            caches = tuple(jax.lax.stop_gradient(c) for c in comm.new_feat_caches)
+            return loss, caches
+
+        grad_fn = jax.value_and_grad(loss_fn, argnums=(0, 1), has_aux=True)
+        (loss, caches), (pgrads, ggrads) = grad_fn(state.params, state.halo.gslots())
+        new_halo = HaloState(feats=caches, grads=ggrads)
+        return _finish(state, pgrads, loss, new_halo)
+
+    def eval_step(params, block, x, y, mask, key):
+        comm = SylvieComm(sync_cfg.replace(mode="vanilla", stochastic=False),
+                          block.plan, key)
+        logits = model.apply(params, block, x, comm)
+        correct, count = nn.accuracy_counts(logits, y, mask.astype(jnp.float32))
+        return _psum(correct, axis), _psum(count, axis)
+
+    return train_step_sync, train_step_async, eval_step

@@ -1,0 +1,157 @@
+"""GNN trainer: epoch loop, Bounded Staleness Adaptor scheduling, eval,
+checkpoint/restart, optional EF21 gradient compression, metrics.
+
+One :class:`GNNTrainer` drives either execution mode:
+  * simulated (axis_name=None, default on 1 CPU device) — the stacked
+    reference semantics used by tests/benchmarks;
+  * shard_map over a mesh — one partition per device (the production path).
+
+The *Bounded Staleness Adaptor* (paper §3.3) lives here: with
+``cfg.mode == "async"`` and ``eps_s = k``, every k-th epoch runs the
+synchronous step, refreshing all halo caches and draining in-flight boundary
+gradients; epoch 0 is always synchronous (cache warm-up). ``eps_s=None``
+means pure Sylvie-A.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.exchange import exchange_bytes
+from ..core.staleness import use_sync_step
+from ..core.sylvie import SylvieConfig
+from ..dist import api as dist
+from ..models.gnn import blocks as B
+from . import checkpoint as ckpt
+from . import optimizer as optlib
+from .gnn_step import GNNTrainState, make_gnn_steps
+
+
+@dataclasses.dataclass
+class EpochMetrics:
+    epoch: int
+    loss: float
+    seconds: float
+    mode: str
+    comm_payload_mb: float
+    comm_ec_mb: float
+    val_acc: Optional[float] = None
+
+
+class GNNTrainer:
+    def __init__(self, model, pg, cfg: SylvieConfig,
+                 opt: Optional[optlib.Optimizer] = None,
+                 eps_s: Optional[int] = None, mesh=None, seed: int = 0,
+                 ckpt_dir: Optional[str] = None, keep: int = 3):
+        self.model = model
+        self.pg = pg
+        self.cfg = cfg
+        self.eps_s = eps_s
+        self.mesh = mesh
+        self.opt = opt or optlib.adam(1e-2)
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self.key = jax.random.PRNGKey(seed)
+
+        self.block = B.build_block(pg)
+        p = pg.plan.n_parts
+        self.x = jnp.asarray(pg.x)
+        self.y = jnp.asarray(pg.y)
+        self.train_mask = jnp.asarray(pg.train_mask)
+        self.val_mask = jnp.asarray(pg.val_mask)
+        self.test_mask = jnp.asarray(pg.test_mask)
+        self.state = GNNTrainState.create(self.model, self.opt, self.key,
+                                          self.block.plan, stacked_parts=p)
+        ts, ta, ev = make_gnn_steps(self.model, cfg, self.opt)
+        if mesh is None:
+            self._ts, self._ta, self._ev = (jax.jit(ts), jax.jit(ta),
+                                            jax.jit(ev))
+        else:
+            self._ts, self._ta, self._ev = dist.shard_gnn_steps(
+                ts, ta, ev, mesh, self.state, self.block)
+            self.state, self.block, arrs = dist.device_put_gnn(
+                mesh, self.state, self.block,
+                (self.x, self.y, self.train_mask, self.val_mask,
+                 self.test_mask))
+            (self.x, self.y, self.train_mask, self.val_mask,
+             self.test_mask) = arrs
+        self.epoch = 0
+        self.history: list[EpochMetrics] = []
+        self._needs_sync = False
+
+    # ------------------------------------------------------------------
+    def comm_bytes_per_epoch(self) -> tuple[float, float]:
+        """(payload, error-compensation) bytes moved per epoch per partition
+        x2 for forward + backward exchanges."""
+        bits = self.cfg.effective_bits
+        payload = ec = 0
+        for d in self.model.comm_dims():
+            pb, eb = exchange_bytes(self.block.plan, d, bits,
+                                    self.cfg.scale_dtype)
+            payload += 2 * pb
+            ec += 2 * eb
+        return payload, ec
+
+    def _epoch_key(self):
+        return jax.random.fold_in(self.key, self.epoch)
+
+    def train_epoch(self) -> EpochMetrics:
+        sync = (self.cfg.mode != "async" or self._needs_sync
+                or use_sync_step(self.epoch, self.eps_s))
+        fn = self._ts if sync else self._ta
+        t0 = time.time()
+        self.state, loss = fn(self.state, self.block, self.x, self.y,
+                              self.train_mask, self._epoch_key())
+        loss = float(loss)
+        dt = time.time() - t0
+        self._needs_sync = False
+        pb, eb = self.comm_bytes_per_epoch()
+        m = EpochMetrics(self.epoch, loss, dt, "sync" if sync else "async",
+                         pb / 1e6, eb / 1e6)
+        self.history.append(m)
+        self.epoch += 1
+        return m
+
+    def evaluate(self, split: str = "val") -> float:
+        mask = {"train": self.train_mask, "val": self.val_mask,
+                "test": self.test_mask}[split]
+        c, n = self._ev(self.state.params, self.block, self.x, self.y, mask,
+                        self._epoch_key())
+        return float(c) / max(float(n), 1.0)
+
+    def fit(self, epochs: int, eval_every: int = 0) -> list[EpochMetrics]:
+        for _ in range(epochs):
+            m = self.train_epoch()
+            if eval_every and self.epoch % eval_every == 0:
+                m.val_acc = self.evaluate("val")
+            if self.ckpt_dir and self.epoch % max(1, epochs // 5) == 0:
+                self.save()
+        return self.history
+
+    # ------------------------------------------------------------------
+    def save(self):
+        meta = dict(n_parts=self.pg.plan.n_parts, epoch=self.epoch,
+                    mode=self.cfg.mode, bits=self.cfg.bits)
+        ckpt.save(self.ckpt_dir, self.epoch, self.state, meta, keep=self.keep)
+
+    def resume(self) -> bool:
+        """Restore the latest checkpoint if present. Returns True if resumed.
+        An elastic repartition (different n_parts) zeroes halo caches and
+        forces one synchronous epoch."""
+        step = ckpt.latest_step(self.ckpt_dir) if self.ckpt_dir else None
+        if step is None:
+            return False
+        tree, meta, needs_sync = ckpt.restore(self.ckpt_dir, self.state)
+        self.state = jax.tree.map(jnp.asarray, tree)
+        if self.mesh is not None:
+            self.state, self.block, _ = dist.device_put_gnn(
+                self.mesh, self.state, self.block, ())
+        self.epoch = int(meta.get("epoch", step))
+        self._needs_sync = needs_sync or \
+            meta.get("n_parts") != self.pg.plan.n_parts
+        return True

