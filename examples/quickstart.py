@@ -1,42 +1,65 @@
 """Quickstart: train a GCN full-graph with Sylvie-S 1-bit halo exchange.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py                       # simulated
+    PYTHONPATH=src python examples/quickstart.py --runtime shard_map   # 1 part/device
 
-Partitions a synthetic community graph over 4 (simulated) partitions, trains
-with quantized boundary communication, and prints the comm-volume cut and
-final accuracy — the paper's core result at laptop scale.
+Partitions a synthetic community graph over 4 partitions, trains with
+quantized boundary communication, and prints the comm-volume cut and final
+accuracy — the paper's core result at laptop scale. Everything goes through
+the ``repro.api`` facade: the *only* difference between the two invocations is
+the :class:`Runtime` (simulated stacked semantics vs. shard_map over host
+devices); model and training config are identical.
 """
+import argparse
+import os
 import pathlib
 import sys
 
+PARSER = argparse.ArgumentParser(description=__doc__)
+PARSER.add_argument("--runtime", choices=("simulated", "shard_map"),
+                    default="simulated")
+PARSER.add_argument("--parts", type=int, default=4)
+PARSER.add_argument("--epochs", type=int, default=40)
+ARGS = PARSER.parse_args()
+
+if ARGS.runtime == "shard_map":
+    # must happen before jax initializes: give the host that many CPU devices
+    # (append so a user-set XLA_FLAGS keeps its other flags)
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={ARGS.parts}"
+            .strip())
+
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
-from repro.core.sylvie import SylvieConfig
-from repro.graph import formats, partition, synthetic
-from repro.models.gnn.models import GCN
-from repro.train.trainer import GNNTrainer
+import repro.api as repro  # noqa: E402
+from repro.graph import synthetic  # noqa: E402
+from repro.models.gnn.models import GCN  # noqa: E402
 
 
 def main() -> None:
     # 1. a graph (swap in your own formats.Graph here)
     g = synthetic.planted_partition(n_nodes=2000, d_feat=64, avg_degree=10)
-    ei = formats.add_self_loops(g.edge_index, g.n_nodes)
-    ew = formats.gcn_edge_weights(ei, g.n_nodes)
-    g = formats.Graph(g.n_nodes, ei, g.x, g.y, g.train_mask, g.val_mask,
-                      g.test_mask, n_classes=g.n_classes)
 
-    # 2. Graph Engine: partition + halo plan (paper step 1)
-    pg = partition.partition_graph(g, n_parts=4, edge_weight=ew)
-    print(f"partitioned: {pg.plan.n_parts} parts, n_local={pg.plan.n_local}, "
-          f"halo slots/pair={pg.plan.h_pad}, "
+    # 2. pick the execution mode — one object, nothing else changes
+    if ARGS.runtime == "shard_map":
+        runtime = repro.Runtime.from_mesh(repro.make_gnn_mesh(ARGS.parts))
+    else:
+        runtime = repro.Runtime.simulated(ARGS.parts)
+
+    # 3. Graph Engine: partition + halo plan (paper step 1)
+    pg = repro.partition(g, runtime=runtime)
+    print(f"[{ARGS.runtime}] partitioned: {pg.plan.n_parts} parts, "
+          f"n_local={pg.plan.n_local}, halo slots/pair={pg.plan.h_pad}, "
           f"pad efficiency={pg.plan.pad_efficiency():.2f}")
 
-    # 3. model + Sylvie-S runtime (quantize -> exchange -> dequantize)
+    # 4. model + Sylvie-S runtime (quantize -> exchange -> dequantize)
     model = GCN(d_in=64, d_hidden=128, d_out=g.n_classes, n_layers=2)
     for mode, bits in (("vanilla", 32), ("sync", 1)):
-        tr = GNNTrainer(model, pg, SylvieConfig(mode=mode, bits=bits))
+        tr = repro.train(model, pg, mode=mode, bits=bits, runtime=runtime,
+                         epochs=ARGS.epochs)
         pb, eb = tr.comm_bytes_per_epoch()
-        tr.fit(40)
         print(f"{mode:8s} bits={bits:2d}  comm/epoch={pb/1e6:7.2f}MB "
               f"(+{eb/1e6:.3f}MB error-comp)  "
               f"test acc={tr.evaluate('test'):.4f}")

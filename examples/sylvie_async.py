@@ -5,7 +5,9 @@
 Compares pure Sylvie-A against Sylvie-A with eps_s={2,5} (one synchronous
 cache-refresh epoch every eps_s epochs) and shows checkpoint/restart with the
 staleness caches restored bit-exactly — then an elastic resume at a different
-partition count.
+partition count. Uses the ``repro.api`` facade; swap
+``Runtime.simulated(parts)`` for ``Runtime.from_mesh(mesh)`` to run one
+partition per device.
 """
 import pathlib
 import sys
@@ -13,20 +15,15 @@ import tempfile
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
-from repro.core.sylvie import SylvieConfig
-from repro.graph import formats, partition, synthetic
-from repro.models.gnn.models import GraphSAGE
-from repro.train.trainer import GNNTrainer
+import repro.api as repro  # noqa: E402
+from repro.graph import synthetic  # noqa: E402
+from repro.models.gnn.models import GraphSAGE  # noqa: E402
 
 
 def build(parts: int):
     g = synthetic.planted_partition(n_nodes=1500, d_feat=48, avg_degree=12,
                                     seed=7)
-    ei = formats.add_self_loops(g.edge_index, g.n_nodes)
-    ew = formats.gcn_edge_weights(ei, g.n_nodes)
-    g = formats.Graph(g.n_nodes, ei, g.x, g.y, g.train_mask, g.val_mask,
-                      g.test_mask, n_classes=g.n_classes)
-    pg = partition.partition_graph(g, parts, edge_weight=ew)
+    pg = repro.partition(g, runtime=repro.Runtime.simulated(parts))
     model = GraphSAGE(d_in=48, d_hidden=96, d_out=g.n_classes, n_layers=2)
     return model, pg
 
@@ -34,23 +31,20 @@ def build(parts: int):
 def main() -> None:
     for eps in (None, 5, 2):
         model, pg = build(4)
-        tr = GNNTrainer(model, pg, SylvieConfig(mode="async", bits=1),
-                        eps_s=eps)
-        tr.fit(30)
+        tr = repro.train(model, pg, mode="async", bits=1, eps_s=eps,
+                         epochs=30)
         sync_epochs = sum(1 for m in tr.history if m.mode == "sync")
         print(f"Sylvie-A eps_s={eps!s:4s}: val acc {tr.evaluate('val'):.4f} "
               f"({sync_epochs}/30 synchronous refresh epochs)")
 
     with tempfile.TemporaryDirectory() as d:
         model, pg = build(4)
-        tr = GNNTrainer(model, pg, SylvieConfig(mode="async", bits=1),
-                        eps_s=5, ckpt_dir=d)
-        tr.fit(10)
+        tr = repro.train(model, pg, mode="async", bits=1, eps_s=5,
+                         ckpt_dir=d, epochs=10)
         tr.save()
         ref = [tr.train_epoch().loss for _ in range(3)]
 
-        tr2 = GNNTrainer(model, pg, SylvieConfig(mode="async", bits=1),
-                         eps_s=5, ckpt_dir=d)
+        tr2 = repro.train(model, pg, mode="async", bits=1, eps_s=5, ckpt_dir=d)
         tr2.resume()
         res = [tr2.train_epoch().loss for _ in range(3)]
         print(f"restart: losses match bit-exactly: "
@@ -58,8 +52,8 @@ def main() -> None:
 
         # elastic: same checkpoint, different partition count
         model8, pg8 = build(8)
-        tr8 = GNNTrainer(model8, pg8, SylvieConfig(mode="async", bits=1),
-                         eps_s=5, ckpt_dir=d)
+        tr8 = repro.train(model8, pg8, mode="async", bits=1, eps_s=5,
+                          ckpt_dir=d)
         tr8.resume()
         m = tr8.train_epoch()
         print(f"elastic 4->8 parts: resumed at epoch {tr8.epoch-1}, first "

@@ -1,0 +1,81 @@
+"""repro.api — the one-import facade over the Sylvie reproduction.
+
+    import repro.api as repro
+
+    g = synthetic.planted_partition(n_nodes=2000, d_feat=64)
+    runtime = repro.Runtime.simulated(4)          # or Runtime.from_mesh(mesh)
+    pg = repro.partition(g, runtime=runtime)      # Graph Engine (paper step 1)
+    trainer = repro.train(model, pg, mode="sync", bits=1,
+                          runtime=runtime, epochs=40)
+    print(trainer.evaluate("test"))
+
+Execution mode — simulated stack vs. shard_map over a device mesh — is fixed
+by the :class:`Runtime` alone; model code and training config are identical in
+both. See DESIGN.md for the Runtime / HaloBackend architecture.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from .core.sylvie import SylvieConfig
+from .dist import (HaloBackend, Runtime, ShardMapBackend,  # noqa: F401
+                   SimulatedBackend)
+from .dist.api import make_gnn_mesh  # noqa: F401
+from .graph import formats
+from .graph import partition as partlib
+from .train.trainer import GNNTrainer
+
+
+def partition(g: formats.Graph, n_parts: Optional[int] = None, *,
+              runtime: Optional[Runtime] = None, method: str = "block",
+              self_loops: bool = True, gcn_weights: bool = True,
+              seed: int = 0) -> partlib.PartitionedGraph:
+    """Partition a host graph + build its static halo-exchange plan.
+
+    ``n_parts`` may be given directly or inferred from ``runtime`` (mesh size /
+    simulated partition count). By default the graph is GCN-normalized:
+    self-loops added and symmetric-normalized edge weights attached. A graph
+    carrying ``edge_attr`` keeps it; the appended self-loop edges get
+    zero-valued attribute rows (matching the zero-length geometric edge).
+    """
+    if n_parts is None and runtime is not None:
+        n_parts = runtime.n_parts
+    if n_parts is None:
+        raise ValueError("pass n_parts or a runtime that fixes it")
+    ei = g.edge_index
+    ea = g.edge_attr
+    if self_loops:
+        n_before = ei.shape[1]
+        ei = formats.add_self_loops(ei, g.n_nodes)
+        if ea is not None:
+            pad = np.zeros((ei.shape[1] - n_before, ea.shape[1]), ea.dtype)
+            ea = np.concatenate([ea, pad], axis=0)
+    ew = formats.gcn_edge_weights(ei, g.n_nodes) if gcn_weights else None
+    g = dataclasses.replace(g, edge_index=ei, edge_attr=ea)
+    return partlib.partition_graph(g, n_parts, method=method,
+                                   edge_weight=ew, seed=seed)
+
+
+def train(model, pg: partlib.PartitionedGraph,
+          cfg: Optional[SylvieConfig] = None, *,
+          runtime: Optional[Runtime] = None, epochs: int = 0,
+          eps_s: Optional[int] = None, opt=None, seed: int = 0,
+          ckpt_dir: Optional[str] = None, **cfg_kw) -> GNNTrainer:
+    """Build a :class:`GNNTrainer` (and optionally run ``epochs`` of training).
+
+    Either pass a full :class:`SylvieConfig` as ``cfg`` or its fields as
+    keywords (``mode="async"``, ``bits=1``, ...). ``runtime`` defaults to the
+    simulated stack at the graph's partition count.
+    """
+    if cfg is None:
+        cfg = SylvieConfig(**cfg_kw)
+    elif cfg_kw:
+        raise TypeError(f"pass cfg or config keywords, not both: {cfg_kw}")
+    trainer = GNNTrainer(model, pg, cfg, opt=opt, eps_s=eps_s,
+                         runtime=runtime, seed=seed, ckpt_dir=ckpt_dir)
+    if epochs:
+        trainer.fit(epochs)
+    return trainer

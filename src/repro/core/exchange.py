@@ -1,15 +1,12 @@
-"""Halo exchange primitives: boundary gather/scatter + the all-to-all itself.
+"""Halo exchange primitives: boundary gather/scatter + the exchange entry points.
 
 All GNN runtime code operates on *stacked* arrays with a leading partition axis
-``P`` — e.g. node features ``(P, n_local, d)``. Two execution modes share this code:
-
-* **simulated** (``axis_name=None``): the full stack lives on one device; the
-  exchange is the pure transpose ``out[p, q*h+s] = in[q, p*h+s]``. Reference
-  semantics; used by tests and CPU training runs.
-* **shard_map** (``axis_name='parts'``): each device holds one partition — the
-  leading axis is locally size 1 — and the exchange is a single
-  ``jax.lax.all_to_all`` over the halo-buffer axis (axis 1, ``tiled=True``), which
-  implements exactly the same transpose across devices.
+``P`` — e.g. node features ``(P, n_local, d)``. *Which* collective moves the
+halo buffers is a :class:`repro.dist.backend.HaloBackend` decision — the
+simulated stacked transpose or the shard_map ``lax.all_to_all`` (or any future
+communicator) — and this module is the seam: :func:`exchange` /
+:func:`exchange_quantized` accept a backend (or a legacy axis-name designator,
+normalized via ``as_backend``) and delegate to it.
 
 The exchange permutation is an involution (a transpose), so the backward
 communication (Alg. 2) reuses the same primitive.
@@ -17,12 +14,12 @@ communication (Alg. 2) reuses the same primitive.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..dist.backend import as_backend
 from .quantization import QuantizedTensor
 
 
@@ -78,29 +75,20 @@ def scatter_boundary_grad(g: jax.Array, plan: PlanArrays) -> jax.Array:
     return jax.vmap(one)(g, plan.send_idx)
 
 
-def exchange(x: jax.Array, axis_name: Optional[str]) -> jax.Array:
+def exchange(x: jax.Array, backend=None) -> jax.Array:
     """The halo all-to-all. ``x``: (P_local, P*h_pad, ...) pairwise-blocked buffer.
 
-    simulated: transpose across the stacked leading axis.
-    shard_map: tiled all_to_all over axis 1 (per-device leading axis is size 1).
+    ``backend`` is a :class:`~repro.dist.backend.HaloBackend`; ``None`` (the
+    simulated stacked transpose) and bare axis names are accepted for
+    compatibility and normalized via ``as_backend``.
     """
-    if axis_name is None:
-        p = x.shape[0]
-        h = x.shape[1] // p
-        y = x.reshape((p, p, h) + x.shape[2:])
-        y = jnp.swapaxes(y, 0, 1)
-        return y.reshape((p, p * h) + x.shape[2:])
-    return jax.lax.all_to_all(x, axis_name, split_axis=1, concat_axis=1, tiled=True)
+    return as_backend(backend).exchange(x)
 
 
-def exchange_quantized(qt: QuantizedTensor, axis_name: Optional[str]) -> QuantizedTensor:
+def exchange_quantized(qt: QuantizedTensor, backend=None) -> QuantizedTensor:
     """Exchange a quantized payload: data + error-compensation (scale, zero) move
     together (paper §3.2 Communicator)."""
-    return QuantizedTensor(
-        data=exchange(qt.data, axis_name),
-        scale=exchange(qt.scale, axis_name) if qt.scale.size else qt.scale,
-        zero=exchange(qt.zero, axis_name) if qt.zero.size else qt.zero,
-        bits=qt.bits, feat_dim=qt.feat_dim)
+    return as_backend(backend).exchange_quantized(qt)
 
 
 def exchange_bytes(plan: PlanArrays, d: int, bits: int,

@@ -22,11 +22,11 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from ..dist.backend import as_backend
 from . import quantization as qlib
 from .exchange import (PlanArrays, exchange, exchange_quantized, gather_boundary,
                        scatter_boundary_grad)
@@ -39,7 +39,6 @@ class SylvieConfig:
     mode: Mode = "sync"
     bits: int = 1
     stochastic: bool = True
-    axis_name: Optional[str] = None     # None = simulated single-process stack
     scale_dtype: jnp.dtype = jnp.bfloat16
     # BNS-GCN baseline (Wan et al. 2022a): random boundary-node sampling.
     # Each epoch keeps a (1-p) fraction of halo rows, scaled by 1/(1-p);
@@ -54,10 +53,10 @@ class SylvieConfig:
         return dataclasses.replace(self, **kw)
 
 
-def _q_roundtrip(buf, key, bits, stochastic, scale_dtype, axis_name):
+def _q_roundtrip(buf, key, bits, stochastic, scale_dtype, backend):
     """quantize -> exchange -> dequantize (one direction of the Low-bit Module)."""
     qt = qlib.quantize(buf, bits, key, stochastic, scale_dtype)
-    qr = exchange_quantized(qt, axis_name)
+    qr = exchange_quantized(qt, backend)
     return qlib.dequantize(qr)
 
 
@@ -66,23 +65,23 @@ def _q_roundtrip(buf, key, bits, stochastic, scale_dtype, axis_name):
 # ---------------------------------------------------------------------------
 @partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
 def quantized_halo(h, plan: PlanArrays, fwd_key, bwd_key,
-                   bits: int, stochastic: bool, scale_dtype, axis_name):
+                   bits: int, stochastic: bool, scale_dtype, backend):
     """(P, n_local, d) -> (P, P*h_pad, d) dequantized halo features."""
     buf = gather_boundary(h, plan)
-    out = _q_roundtrip(buf, fwd_key, bits, stochastic, scale_dtype, axis_name)
+    out = _q_roundtrip(buf, fwd_key, bits, stochastic, scale_dtype, backend)
     return jnp.where(plan.recv_mask[..., None], out, 0)
 
 
-def _qh_fwd(h, plan, fwd_key, bwd_key, bits, stochastic, scale_dtype, axis_name):
+def _qh_fwd(h, plan, fwd_key, bwd_key, bits, stochastic, scale_dtype, backend):
     out = quantized_halo(h, plan, fwd_key, bwd_key,
-                         bits, stochastic, scale_dtype, axis_name)
+                         bits, stochastic, scale_dtype, backend)
     return out, (plan, bwd_key)
 
 
-def _qh_bwd(bits, stochastic, scale_dtype, axis_name, res, g):
+def _qh_bwd(bits, stochastic, scale_dtype, backend, res, g):
     plan, bwd_key = res
     g = jnp.where(plan.recv_mask[..., None], g, 0)
-    back = _q_roundtrip(g, bwd_key, bits, stochastic, scale_dtype, axis_name)
+    back = _q_roundtrip(g, bwd_key, bits, stochastic, scale_dtype, backend)
     grad_h = scatter_boundary_grad(back, plan)
     return (grad_h, None, None, None)
 
@@ -93,18 +92,18 @@ quantized_halo.defvjp(_qh_fwd, _qh_bwd)
 # ---------------------------------------------------------------------------
 # Sylvie-A: stale halo consumption + fresh exchange emission
 # ---------------------------------------------------------------------------
-def fresh_halo(h, plan: PlanArrays, key, bits, stochastic, scale_dtype, axis_name):
+def fresh_halo(h, plan: PlanArrays, key, bits, stochastic, scale_dtype, backend):
     """The concurrent forward exchange: quantize this step's boundary features and
     deliver them as *next* step's cache. Detached — no gradient flows (staleness
     is handled by the grad_in path)."""
     buf = gather_boundary(jax.lax.stop_gradient(h), plan)
-    out = _q_roundtrip(buf, key, bits, stochastic, scale_dtype, axis_name)
+    out = _q_roundtrip(buf, key, bits, stochastic, scale_dtype, backend)
     return jnp.where(plan.recv_mask[..., None], out, 0)
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8, 9))
 def stale_halo(h, feat_cache, grad_in, gslot, plan: PlanArrays, bwd_key,
-               bits: int, stochastic: bool, scale_dtype, axis_name):
+               bits: int, stochastic: bool, scale_dtype, backend):
     """Consume the stale halo; wire the staleness dataflow into autodiff.
 
     * primal output  = ``feat_cache`` (previous step's dequantized halo features)
@@ -118,14 +117,14 @@ def stale_halo(h, feat_cache, grad_in, gslot, plan: PlanArrays, bwd_key,
 
 
 def _sh_fwd(h, feat_cache, grad_in, gslot, plan, bwd_key,
-            bits, stochastic, scale_dtype, axis_name):
+            bits, stochastic, scale_dtype, backend):
     return feat_cache, (plan, grad_in, bwd_key)
 
 
-def _sh_bwd(bits, stochastic, scale_dtype, axis_name, res, g):
+def _sh_bwd(bits, stochastic, scale_dtype, backend, res, g):
     plan, grad_in, bwd_key = res
     g = jnp.where(plan.recv_mask[..., None], g, 0)
-    fresh_grad = _q_roundtrip(g, bwd_key, bits, stochastic, scale_dtype, axis_name)
+    fresh_grad = _q_roundtrip(g, bwd_key, bits, stochastic, scale_dtype, backend)
     fresh_grad = jnp.where(plan.send_mask[..., None], fresh_grad, 0)
     grad_h = scatter_boundary_grad(grad_in, plan)
     return (grad_h, None, None, fresh_grad, None, None)
@@ -139,13 +138,16 @@ stale_halo.defvjp(_sh_fwd, _sh_bwd)
 # ---------------------------------------------------------------------------
 class SylvieComm:
     """Created inside each traced step; models call ``comm.halo(h)`` once per
-    layer-exchange site. Collects fresh caches (async mode) as it goes."""
+    layer-exchange site. All communication goes through ``backend`` (a
+    :class:`repro.dist.backend.HaloBackend`; the simulated stack by default).
+    Collects fresh caches (async mode) as it goes."""
 
     def __init__(self, cfg: SylvieConfig, plan: PlanArrays, key,
-                 feat_caches=None, grad_ins=None, gslots=None):
+                 backend=None, feat_caches=None, grad_ins=None, gslots=None):
         self.cfg = cfg
         self.plan = plan
         self.key = key
+        self.backend = as_backend(backend)
         self.feat_caches = feat_caches
         self.grad_ins = grad_ins
         self.gslots = gslots
@@ -156,13 +158,9 @@ class SylvieComm:
         """Decorrelate stochastic-rounding noise across partitions: fold the
         partition index into the key under shard_map (the simulated mode's
         single batched uniform draw is already decorrelated)."""
-        axis = self.cfg.axis_name
-        if axis is None:
+        idx = self.backend.axis_index()
+        if idx is None:
             return self.key
-        names = (axis,) if isinstance(axis, str) else tuple(axis)
-        idx = jax.lax.axis_index(names[0])
-        for a in names[1:]:
-            idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
         return jax.random.fold_in(self.key, idx)
 
     def _bns_mask(self, key):
@@ -184,7 +182,7 @@ class SylvieComm:
         bits = cfg.effective_bits
         if cfg.mode in ("vanilla", "sync"):
             halo = quantized_halo(h, self.plan, kf, kb, bits, cfg.stochastic,
-                                  cfg.scale_dtype, cfg.axis_name)
+                                  cfg.scale_dtype, self.backend)
             bns = self._bns_mask(jax.random.fold_in(key, 999))
             if bns is not None:
                 halo = halo * bns[..., None]
@@ -195,10 +193,10 @@ class SylvieComm:
         # async: consume stale, emit fresh
         halo = stale_halo(h, self.feat_caches[i], self.grad_ins[i], self.gslots[i],
                           self.plan, kb, bits, cfg.stochastic, cfg.scale_dtype,
-                          cfg.axis_name)
+                          self.backend)
         self.new_feat_caches.append(
             fresh_halo(h, self.plan, kf, bits, cfg.stochastic,
-                       cfg.scale_dtype, cfg.axis_name))
+                       cfg.scale_dtype, self.backend))
         return halo
 
     @property

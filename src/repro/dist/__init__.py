@@ -1,0 +1,11 @@
+"""repro.dist — the distributed runtime layer.
+
+``backend`` defines the pluggable :class:`HaloBackend` communicator protocol
+(SimulatedBackend / ShardMapBackend); ``api`` holds the mesh/spec helpers and
+the shard_map step wrapping; ``runtime`` is the :class:`Runtime` facade that
+the trainer, launch cells, and ``repro.api`` consume.
+"""
+from . import api  # noqa: F401
+from .backend import (HaloBackend, ShardMapBackend, SimulatedBackend,  # noqa: F401
+                      as_backend)
+from .runtime import Runtime  # noqa: F401

@@ -1,0 +1,75 @@
+"""The Runtime facade: one object that fixes the execution mode.
+
+A :class:`Runtime` bundles a :class:`~repro.dist.backend.HaloBackend` with the
+placement/compilation policy that goes with it, so callers (the trainer, the
+launch cells, ``repro.api``) pick an execution mode in exactly one place:
+
+    Runtime.simulated(n_parts=4)        # stacked reference semantics, 1 device
+    Runtime.from_mesh(mesh)             # one partition per mesh device
+    Runtime.sharded(n_parts=8)          # shorthand: 1-D mesh over host devices
+
+Everything downstream — ``SylvieComm``'s exchanges, the weight-gradient
+all-reduce, step compilation, array placement — is derived from the runtime's
+backend; no ``axis_name`` threading.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+
+from . import api
+from .backend import HaloBackend, ShardMapBackend, SimulatedBackend
+
+
+@dataclasses.dataclass(frozen=True)
+class Runtime:
+    backend: HaloBackend
+
+    # -- constructors -------------------------------------------------------
+    @staticmethod
+    def simulated(n_parts: Optional[int] = None) -> "Runtime":
+        """Whole partition stack in one program (tests / CPU training)."""
+        return Runtime(SimulatedBackend(n_parts))
+
+    @staticmethod
+    def from_mesh(mesh) -> "Runtime":
+        """One partition per device of ``mesh`` (the production path)."""
+        return Runtime(ShardMapBackend(mesh))
+
+    @staticmethod
+    def sharded(n_parts: Optional[int] = None, axis_name: str = "parts") -> "Runtime":
+        """Shorthand: build a 1-D mesh over the host's devices and shard it."""
+        return Runtime.from_mesh(api.make_gnn_mesh(n_parts, axis_name))
+
+    # -- introspection ------------------------------------------------------
+    @property
+    def mesh(self):
+        return getattr(self.backend, "mesh", None)
+
+    @property
+    def is_sharded(self) -> bool:
+        return self.mesh is not None
+
+    @property
+    def n_parts(self) -> Optional[int]:
+        """Partition count this runtime is committed to (None = any)."""
+        if self.is_sharded:
+            return api.mesh_size(self.mesh)
+        return getattr(self.backend, "n_parts", None)
+
+    # -- GNN execution ------------------------------------------------------
+    def shard_gnn_steps(self, train_sync, train_async, eval_step, state, block):
+        """Compile the three step functions for this runtime."""
+        if not self.is_sharded:
+            return (jax.jit(train_sync), jax.jit(train_async),
+                    jax.jit(eval_step))
+        return api.shard_gnn_steps(train_sync, train_async, eval_step,
+                                   self.mesh, state, block)
+
+    def device_put_gnn(self, state, block, arrays=()):
+        """Place training state + graph under this runtime's sharding."""
+        if not self.is_sharded:
+            return state, block, tuple(arrays)
+        return api.device_put_gnn(self.mesh, state, block, arrays)

@@ -26,6 +26,7 @@ from ..configs.base import ArchSpec, ShapeCell
 from ..core.staleness import HaloState
 from ..core.sylvie import SylvieConfig
 from ..dist import api as dist
+from ..dist import compat
 from ..graph.partition import analytic_partition_spec
 from ..graph.sampling import SamplerShapes
 from ..models.gnn import blocks as B
@@ -56,7 +57,7 @@ class Cell:
         if self.shard_ctx is not None:
             LM.set_shard_ctx(self.shard_ctx)
             try:
-                with jax.set_mesh(self.mesh):
+                with compat.use_mesh(self.mesh):
                     return self.fn.lower(*self.args)
             finally:
                 LM.set_shard_ctx(None)
@@ -243,14 +244,14 @@ def _gnn_cell(spec: ArchSpec, cell: ShapeCell, mesh, *,
     arch = spec.config()
     n, e, d_feat = gnn_cell_sizes(cell)
     p_n = meshlib.n_devices(mesh)
-    axes = meshlib.flat_axes(mesh)
     pspec = analytic_partition_spec(n, e, p_n)
 
     block = B.block_spec(pspec, d_edge_attr=arch.d_edge_attr,
                          with_weight=True, stacked_parts=p_n)
     model = arch.make(d_feat, n_classes)
     opt = optlib.adam(1e-2)
-    scfg = SylvieConfig(mode=sylvie_mode, bits=bits, axis_name=axes)
+    scfg = SylvieConfig(mode=sylvie_mode, bits=bits)
+    backend = dist.ShardMapBackend(mesh)
 
     params_shape = jax.eval_shape(model.init, KEY_SDS)
     opt_shape = jax.eval_shape(opt.init, params_shape)
@@ -262,7 +263,7 @@ def _gnn_cell(spec: ArchSpec, cell: ShapeCell, mesh, *,
     y = jax.ShapeDtypeStruct((p_n, pspec.n_local), jnp.int32)
     m = jax.ShapeDtypeStruct((p_n, pspec.n_local), jnp.bool_)
 
-    ts, ta, ev = make_gnn_steps(model, scfg, opt)
+    ts, ta, ev = make_gnn_steps(model, scfg, opt, backend=backend)
     ts_w, ta_w, _ = dist.shard_gnn_steps(ts, ta, ev, mesh, state, block)
     fn = ta_w if sylvie_mode == "async" else ts_w
     args = (state, block, x, y, m, KEY_SDS)
@@ -324,19 +325,18 @@ def _dlrm_cell(spec: ArchSpec, cell: ShapeCell, mesh, *,
         ids = jax.ShapeDtypeStruct((b * cfg.total_ids_per_sample,), jnp.int32)
         lb = jax.ShapeDtypeStruct((b,), jnp.float32)
         step = D.make_train_step(cfg, opt, axes)
-        fn = jax.jit(jax.shard_map(
-            step, mesh=mesh,
+        fn = jax.jit(compat.shard_map(
+            step, mesh,
             in_specs=((rep, shard, rep, tspec, rep), shard, shard, shard, rep),
-            out_specs=((rep, shard, rep, tspec, rep), rep), check_vma=True))
+            out_specs=((rep, shard, rep, tspec, rep), rep)))
         args = (state, dx, ids, lb, KEY_SDS)
     elif cell.step == "serve":
         b = cell.params["batch"]
         dx = jax.ShapeDtypeStruct((b, cfg.n_dense), jnp.float32)
         ids = jax.ShapeDtypeStruct((b * cfg.total_ids_per_sample,), jnp.int32)
-        fn = jax.jit(jax.shard_map(
-            D.make_serve_step(cfg, axes), mesh=mesh,
-            in_specs=(rep, shard, shard, shard), out_specs=shard,
-            check_vma=True))
+        fn = jax.jit(compat.shard_map(
+            D.make_serve_step(cfg, axes), mesh,
+            in_specs=(rep, shard, shard, shard), out_specs=shard))
         args = (dense, table, dx, ids)
     else:  # retrieval
         ncand = cell.params["n_candidates"]
@@ -344,10 +344,9 @@ def _dlrm_cell(spec: ArchSpec, cell: ShapeCell, mesh, *,
         dx = jax.ShapeDtypeStruct((1, cfg.n_dense), jnp.float32)
         ids = jax.ShapeDtypeStruct((cfg.total_ids_per_sample,), jnp.int32)
         cand = jax.ShapeDtypeStruct((ncand,), jnp.int32)
-        fn = jax.jit(jax.shard_map(
-            D.make_retrieval_step(cfg, axes), mesh=mesh,
-            in_specs=(rep, shard, rep, rep, shard), out_specs=(rep, rep),
-            check_vma=True))
+        fn = jax.jit(compat.shard_map(
+            D.make_retrieval_step(cfg, axes), mesh,
+            in_specs=(rep, shard, rep, rep, shard), out_specs=(rep, rep)))
         args = (dense, table, dx, ids, cand)
 
     return Cell(spec.arch_id, cell.name, cell.step, fn, args, p_n,

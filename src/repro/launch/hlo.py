@@ -194,7 +194,8 @@ class Roofline:
 def analyze(compiled, n_devices: int,
             model_flops_total: Optional[float] = None):
     """(compiled executable, mesh size) -> (Roofline, CollectiveStats, mem)."""
-    cost = compiled.cost_analysis()
+    from ..dist import compat
+    cost = compat.cost_analysis(compiled)
     flops = float(cost.get("flops", 0.0))
     hbm = float(cost.get("bytes accessed", 0.0))
     stats = collective_bytes(compiled.as_text(), n_devices)

@@ -13,31 +13,28 @@ partitions); the LM runtime uses FSDP over ("pod","data") and TP/EP over
 """
 from __future__ import annotations
 
-import jax
+from ..dist import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh for CPU multi-device tests (device count forced by caller)."""
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def flat_axes(mesh) -> tuple[str, ...]:
-    return tuple(mesh.axis_names)
+    from ..dist import api as dist_api
+    return dist_api.flat_axes(mesh)
 
 
 def n_devices(mesh) -> int:
-    out = 1
-    for a in mesh.axis_names:
-        out *= mesh.shape[a]
-    return out
+    from ..dist import api as dist_api
+    return dist_api.mesh_size(mesh)
 
 
 # TPU v5e hardware constants for the roofline terms (per chip).

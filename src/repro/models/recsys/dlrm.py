@@ -37,6 +37,7 @@ import numpy as np
 
 from ..nn import mlp, mlp_init
 from ...core import quantization as qlib
+from ...dist import compat
 
 # MLPerf DLRM (Criteo Terabyte) per-field vocabulary sizes.
 CRITEO_TABLE_SIZES = (
@@ -117,7 +118,7 @@ def _axis_index(axis_name):
     names = (axis_name,) if isinstance(axis_name, str) else tuple(axis_name)
     idx = jax.lax.axis_index(names[0])
     for a in names[1:]:
-        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        idx = idx * compat.axis_size(a) + jax.lax.axis_index(a)
     return idx
 
 
@@ -245,10 +246,11 @@ def make_train_step(cfg: DLRMConfig, optimizer, axis_name=None):
     """State: (dense_params, table, opt_dense, opt_table, step).
 
     The loss is sum-form normalized by the *global* batch, so per-device
-    gradients are exact global-mean contributions; shard_map(check_vma=True)
-    reduces the replicated dense params' cotangents at the boundary, and the
-    table grads stay local — each device owns its rows (the embedding
-    collective's backward routes contributions to owners)."""
+    gradients are exact global-mean contributions; the replicated dense
+    params' gradients are explicitly psummed (shard_map runs with replication
+    checking off — see repro.dist.compat.shard_map), and the table grads stay
+    local — each device owns its rows (the embedding collective's backward
+    routes contributions to owners)."""
     def train_step(state, dense_x, flat_ids, labels, key):
         dense_params, table, opt_d, opt_t, step = state
         n_dev = 1
@@ -256,7 +258,7 @@ def make_train_step(cfg: DLRMConfig, optimizer, axis_name=None):
             names = ((axis_name,) if isinstance(axis_name, str)
                      else tuple(axis_name))
             for a in names:
-                n_dev *= jax.lax.axis_size(a)
+                n_dev *= compat.axis_size(a)
 
         def loss_fn(dp, tb):
             logits = dlrm_forward(dp, tb, dense_x, flat_ids, cfg, axis_name,
@@ -267,6 +269,7 @@ def make_train_step(cfg: DLRMConfig, optimizer, axis_name=None):
             dense_params, table)
         if axis_name is not None:
             loss = jax.lax.psum(loss, axis_name)
+            gd = jax.tree.map(lambda g: jax.lax.psum(g, axis_name), gd)
         upd_d, opt_d = optimizer.update(gd, opt_d, dense_params)
         upd_t, opt_t = optimizer.update(gt, opt_t, table)
         from ...train.optimizer import apply_updates

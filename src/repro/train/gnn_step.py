@@ -25,6 +25,7 @@ import jax.numpy as jnp
 
 from ..core.staleness import HaloState
 from ..core.sylvie import SylvieComm, SylvieConfig
+from ..dist.backend import as_backend
 from ..models import nn
 from . import optimizer as optlib
 
@@ -47,25 +48,30 @@ class GNNTrainState:
             step=jnp.zeros((), jnp.int32))
 
 
-def _psum(x, axis):
-    return jax.lax.psum(x, axis) if axis is not None else x
-
-
-def _masked_loss(logits, y, mask, axis):
+def _masked_loss(logits, y, mask, backend):
     s, c = nn.cross_entropy(logits, y, mask.astype(jnp.float32))
-    return _psum(s, axis) / jnp.maximum(_psum(c, axis), 1.0)
+    return backend.psum(s) / jnp.maximum(backend.psum(c), 1.0)
 
 
 def make_gnn_steps(model, cfg: SylvieConfig, opt: optlib.Optimizer,
-                   clip_norm: Optional[float] = None):
+                   backend=None, clip_norm: Optional[float] = None):
     """Builds (train_step_sync, train_step_async, eval_step). All three are pure
     and jit/shard_map-compatible; the caller decides which to invoke per epoch
-    (Bounded Staleness Adaptor — core/staleness.use_sync_step)."""
-    axis = cfg.axis_name
+    (Bounded Staleness Adaptor — core/staleness.use_sync_step).
+
+    ``backend`` fixes the communicator (a :class:`repro.dist.backend.HaloBackend`;
+    simulated stack by default). Steps built with a :class:`ShardMapBackend`
+    must be wrapped via ``dist.api.shard_gnn_steps`` (or ``Runtime``) so their
+    collectives find the mesh axes."""
+    backend = as_backend(backend)
     sync_cfg = cfg if cfg.mode != "async" else cfg.replace(mode="sync")
     async_cfg = cfg.replace(mode="async")
 
     def _finish(state, params_grads, loss, new_halo):
+        # Alg. 2 line 16: weight gradients are all-reduced across partitions —
+        # an explicit backend.psum under shard_map, the identity in the
+        # simulated stack (whose contraction is already global).
+        params_grads = jax.tree.map(backend.psum, params_grads)
         if clip_norm is not None:
             params_grads, _ = optlib.clip_by_global_norm(params_grads, clip_norm)
         updates, new_opt = opt.update(params_grads, state.opt_state, state.params)
@@ -74,15 +80,12 @@ def make_gnn_steps(model, cfg: SylvieConfig, opt: optlib.Optimizer,
 
     def train_step_sync(state: GNNTrainState, block, x, y, mask, key):
         def loss_fn(params):
-            comm = SylvieComm(sync_cfg, block.plan, key)
+            comm = SylvieComm(sync_cfg, block.plan, key, backend=backend)
             logits = model.apply(params, block, x, comm)
-            loss = _masked_loss(logits, y, mask, axis)
+            loss = _masked_loss(logits, y, mask, backend)
             caches = tuple(jax.lax.stop_gradient(c) for c in comm.new_feat_caches)
             return loss, caches
 
-        # NB: no explicit grad psum — under shard_map(check_vma=True) the
-        # cotangent of the replicated params is reduced at the boundary
-        # (Alg. 2 line 16's all-reduce); simulated mode is already global.
         (loss, caches), grads = jax.value_and_grad(loss_fn, has_aux=True)(state.params)
         new_halo = HaloState(feats=caches,
                              grads=tuple(jnp.zeros_like(f) for f in caches))
@@ -90,11 +93,11 @@ def make_gnn_steps(model, cfg: SylvieConfig, opt: optlib.Optimizer,
 
     def train_step_async(state: GNNTrainState, block, x, y, mask, key):
         def loss_fn(params, gslots):
-            comm = SylvieComm(async_cfg, block.plan, key,
+            comm = SylvieComm(async_cfg, block.plan, key, backend=backend,
                               feat_caches=state.halo.feats,
                               grad_ins=state.halo.grads, gslots=gslots)
             logits = model.apply(params, block, x, comm)
-            loss = _masked_loss(logits, y, mask, axis)
+            loss = _masked_loss(logits, y, mask, backend)
             caches = tuple(jax.lax.stop_gradient(c) for c in comm.new_feat_caches)
             return loss, caches
 
@@ -105,9 +108,9 @@ def make_gnn_steps(model, cfg: SylvieConfig, opt: optlib.Optimizer,
 
     def eval_step(params, block, x, y, mask, key):
         comm = SylvieComm(sync_cfg.replace(mode="vanilla", stochastic=False),
-                          block.plan, key)
+                          block.plan, key, backend=backend)
         logits = model.apply(params, block, x, comm)
         correct, count = nn.accuracy_counts(logits, y, mask.astype(jnp.float32))
-        return _psum(correct, axis), _psum(count, axis)
+        return backend.psum(correct), backend.psum(count)
 
     return train_step_sync, train_step_async, eval_step

@@ -1,10 +1,12 @@
 """GNN trainer: epoch loop, Bounded Staleness Adaptor scheduling, eval,
 checkpoint/restart, optional EF21 gradient compression, metrics.
 
-One :class:`GNNTrainer` drives either execution mode:
-  * simulated (axis_name=None, default on 1 CPU device) — the stacked
+One :class:`GNNTrainer` drives either execution mode through a
+:class:`repro.dist.runtime.Runtime`:
+  * ``Runtime.simulated(...)`` (the default on 1 CPU device) — the stacked
     reference semantics used by tests/benchmarks;
-  * shard_map over a mesh — one partition per device (the production path).
+  * ``Runtime.from_mesh(mesh)`` — shard_map, one partition per device (the
+    production path).
 
 The *Bounded Staleness Adaptor* (paper §3.3) lives here: with
 ``cfg.mode == "async"`` and ``eps_s = k``, every k-th epoch runs the
@@ -25,7 +27,7 @@ import numpy as np
 from ..core.exchange import exchange_bytes
 from ..core.staleness import use_sync_step
 from ..core.sylvie import SylvieConfig
-from ..dist import api as dist
+from ..dist.runtime import Runtime
 from ..models.gnn import blocks as B
 from . import checkpoint as ckpt
 from . import optimizer as optlib
@@ -46,20 +48,32 @@ class EpochMetrics:
 class GNNTrainer:
     def __init__(self, model, pg, cfg: SylvieConfig,
                  opt: Optional[optlib.Optimizer] = None,
-                 eps_s: Optional[int] = None, mesh=None, seed: int = 0,
+                 eps_s: Optional[int] = None,
+                 runtime: Optional[Runtime] = None, mesh=None, seed: int = 0,
                  ckpt_dir: Optional[str] = None, keep: int = 3):
         self.model = model
         self.pg = pg
         self.cfg = cfg
         self.eps_s = eps_s
-        self.mesh = mesh
+        p = pg.plan.n_parts
+        if runtime is not None and mesh is not None:
+            raise ValueError("pass runtime or mesh, not both "
+                             "(mesh is shorthand for Runtime.from_mesh)")
+        if runtime is None:
+            runtime = (Runtime.from_mesh(mesh) if mesh is not None
+                       else Runtime.simulated(p))
+        if runtime.n_parts not in (None, p):
+            raise ValueError(
+                f"runtime is committed to {runtime.n_parts} partitions but the "
+                f"graph was partitioned into {p}")
+        self.runtime = runtime
+        self.mesh = runtime.mesh
         self.opt = opt or optlib.adam(1e-2)
         self.ckpt_dir = ckpt_dir
         self.keep = keep
         self.key = jax.random.PRNGKey(seed)
 
         self.block = B.build_block(pg)
-        p = pg.plan.n_parts
         self.x = jnp.asarray(pg.x)
         self.y = jnp.asarray(pg.y)
         self.train_mask = jnp.asarray(pg.train_mask)
@@ -67,19 +81,15 @@ class GNNTrainer:
         self.test_mask = jnp.asarray(pg.test_mask)
         self.state = GNNTrainState.create(self.model, self.opt, self.key,
                                           self.block.plan, stacked_parts=p)
-        ts, ta, ev = make_gnn_steps(self.model, cfg, self.opt)
-        if mesh is None:
-            self._ts, self._ta, self._ev = (jax.jit(ts), jax.jit(ta),
-                                            jax.jit(ev))
-        else:
-            self._ts, self._ta, self._ev = dist.shard_gnn_steps(
-                ts, ta, ev, mesh, self.state, self.block)
-            self.state, self.block, arrs = dist.device_put_gnn(
-                mesh, self.state, self.block,
-                (self.x, self.y, self.train_mask, self.val_mask,
-                 self.test_mask))
-            (self.x, self.y, self.train_mask, self.val_mask,
-             self.test_mask) = arrs
+        ts, ta, ev = make_gnn_steps(self.model, cfg, self.opt,
+                                    backend=runtime.backend)
+        self._ts, self._ta, self._ev = runtime.shard_gnn_steps(
+            ts, ta, ev, self.state, self.block)
+        self.state, self.block, arrs = runtime.device_put_gnn(
+            self.state, self.block,
+            (self.x, self.y, self.train_mask, self.val_mask, self.test_mask))
+        (self.x, self.y, self.train_mask, self.val_mask,
+         self.test_mask) = arrs
         self.epoch = 0
         self.history: list[EpochMetrics] = []
         self._needs_sync = False
@@ -148,9 +158,8 @@ class GNNTrainer:
             return False
         tree, meta, needs_sync = ckpt.restore(self.ckpt_dir, self.state)
         self.state = jax.tree.map(jnp.asarray, tree)
-        if self.mesh is not None:
-            self.state, self.block, _ = dist.device_put_gnn(
-                self.mesh, self.state, self.block, ())
+        self.state, self.block, _ = self.runtime.device_put_gnn(
+            self.state, self.block, ())
         self.epoch = int(meta.get("epoch", step))
         self._needs_sync = needs_sync or \
             meta.get("n_parts") != self.pg.plan.n_parts

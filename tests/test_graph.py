@@ -1,8 +1,12 @@
 """Graph substrate: partitioner invariants (property-based), sampler, formats."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property-based partitioner tests need the 'hypothesis' dev extra")
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
 
 from repro.graph import formats, partition, sampling, synthetic
 

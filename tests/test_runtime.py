@@ -1,0 +1,160 @@
+"""Runtime facade + pluggable communicator backends.
+
+Fast tests cover the backend protocol on the single real CPU device (imports,
+constructors, simulated exchange semantics); the `slow` parity test forks a
+subprocess with 4 forced host devices (jax locks device count at first init)
+and checks that sync and async training produce identical losses and params
+under SimulatedBackend vs ShardMapBackend — end-to-end through `repro.api`.
+"""
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def test_trainer_and_cells_import_cleanly():
+    """The production shard_map path must exist: no ModuleNotFoundError on
+    `repro.dist` from any layer that consumes it."""
+    import repro.api  # noqa: F401
+    import repro.dist.api  # noqa: F401
+    import repro.launch.cells  # noqa: F401
+    import repro.train.trainer  # noqa: F401
+
+
+def test_runtime_constructors_and_introspection():
+    from repro.dist import Runtime, ShardMapBackend, SimulatedBackend
+
+    rt = Runtime.simulated(4)
+    assert isinstance(rt.backend, SimulatedBackend)
+    assert not rt.is_sharded and rt.mesh is None and rt.n_parts == 4
+
+    rt_any = Runtime.simulated()
+    assert rt_any.n_parts is None
+
+    rt_sm = Runtime.sharded()          # 1-D mesh over the host's devices
+    assert rt_sm.is_sharded and isinstance(rt_sm.backend, ShardMapBackend)
+    assert rt_sm.n_parts == len(jax.devices())
+
+
+def test_backends_are_hashable_jit_keys():
+    """Backends ride through custom_vjp nondiff argnums: hash + eq required."""
+    from repro.dist import Runtime, ShardMapBackend, SimulatedBackend
+
+    assert SimulatedBackend() == SimulatedBackend()
+    assert hash(SimulatedBackend(4)) == hash(SimulatedBackend(4))
+    b = ShardMapBackend(axes=("parts",))
+    assert b == ShardMapBackend(axes=("parts",)) and hash(b) == hash(b)
+    assert b != ShardMapBackend(axes=("data", "model"))
+    assert hash(Runtime.simulated(2)) == hash(Runtime.simulated(2))
+
+
+def test_simulated_backend_reference_semantics():
+    from repro.dist import SimulatedBackend
+
+    be = SimulatedBackend()
+    p, h, d = 4, 3, 5
+    x = jax.random.normal(jax.random.PRNGKey(0), (p, p * h, d))
+    y = be.exchange(x)
+    for pi in range(p):
+        for qi in range(p):
+            np.testing.assert_allclose(
+                np.asarray(y[pi, qi * h:(qi + 1) * h]),
+                np.asarray(x[qi, pi * h:(pi + 1) * h]))
+    np.testing.assert_allclose(np.asarray(be.exchange(y)), np.asarray(x))
+    assert be.axis_index() is None
+    np.testing.assert_allclose(np.asarray(be.psum(x)), np.asarray(x))
+    assert be.device_put({"a": x})["a"] is x
+
+
+def test_as_backend_normalizes_legacy_designators():
+    from repro.core.exchange import exchange
+    from repro.dist import ShardMapBackend, SimulatedBackend, as_backend
+
+    assert isinstance(as_backend(None), SimulatedBackend)
+    assert as_backend("parts") == ShardMapBackend(axes=("parts",))
+    assert as_backend(("a", "b")) == ShardMapBackend(axes=("a", "b"))
+    be = SimulatedBackend()
+    assert as_backend(be) is be
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 4, 3))
+    np.testing.assert_allclose(np.asarray(exchange(x, None)),
+                               np.asarray(exchange(x, be)))
+
+
+def test_meshless_backend_rejects_host_side_ops():
+    from repro.dist import ShardMapBackend
+
+    with pytest.raises(ValueError):
+        ShardMapBackend()
+    be = ShardMapBackend(axes=("parts",))
+    with pytest.raises(ValueError):
+        be.shard(lambda s: s)
+    with pytest.raises(ValueError):
+        be.device_put({"a": jnp.zeros(3)})
+
+
+def test_trainer_rejects_partition_count_mismatch():
+    import repro.api as repro
+    from repro.graph import synthetic
+    from repro.models.gnn.models import GCN
+
+    g = synthetic.planted_partition(n_nodes=120, d_feat=8)
+    pg = repro.partition(g, n_parts=2)
+    model = GCN(d_in=8, d_hidden=16, d_out=g.n_classes, n_layers=2)
+    with pytest.raises(ValueError, match="partition"):
+        repro.train(model, pg, mode="sync", bits=1,
+                    runtime=repro.Runtime.simulated(4))
+
+
+PARITY = """
+import repro.api as repro
+from repro.graph import synthetic
+from repro.models.gnn.models import GCN
+from repro.train import optimizer as opt
+
+g = synthetic.planted_partition(n_nodes=400, d_feat=16)
+model = GCN(d_in=16, d_hidden=32, d_out=g.n_classes, n_layers=2)
+rt_sim = repro.Runtime.simulated(4)
+rt_sm = repro.Runtime.from_mesh(repro.make_gnn_mesh(4))
+pg = repro.partition(g, runtime=rt_sim)
+
+
+def run(runtime, mode, epochs):
+    cfg = repro.SylvieConfig(mode=mode, bits=1, stochastic=False)
+    return repro.train(model, pg, cfg, runtime=runtime, opt=opt.sgd(1e-1),
+                       epochs=epochs)
+
+
+for mode, epochs in (("sync", 3), ("async", 4)):
+    a = run(rt_sim, mode, epochs)
+    b = run(rt_sm, mode, epochs)
+    np.testing.assert_allclose([m.loss for m in a.history],
+                               [m.loss for m in b.history], rtol=1e-5)
+    for pa, pb in zip(jax.tree.leaves(a.state.params),
+                      jax.tree.leaves(jax.device_get(b.state.params))):
+        np.testing.assert_allclose(np.asarray(pa), np.asarray(pb),
+                                   rtol=1e-4, atol=1e-6)
+    assert abs(a.evaluate("val") - b.evaluate("val")) < 1e-6, mode
+print("OK")
+"""
+
+
+@pytest.mark.slow
+def test_backend_parity_sync_and_async_on_host_devices():
+    """Simulated vs shard_map: identical losses/params, both train modes."""
+    prog = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import sys; sys.path.insert(0, {SRC!r})
+        import jax, numpy as np
+    """) + textwrap.dedent(PARITY)
+    r = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                       text=True, timeout=600)
+    assert r.returncode == 0, r.stdout[-3000:] + r.stderr[-3000:]
+    assert "OK" in r.stdout

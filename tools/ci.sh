@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# Tier-1 verify: the exact command the roadmap pins. Extra args pass through
+# (e.g. `tools/ci.sh -m "not slow"` for the fast lane).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"
