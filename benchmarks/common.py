@@ -74,8 +74,10 @@ def timed_epochs(tr: GNNTrainer, epochs: int, warmup: int = 3):
 
 
 def modeled_comm_s(tr: GNNTrainer) -> float:
+    """Modeled per-device TPU comm time: comm_bytes_per_epoch totals across
+    partitions, exchanges run concurrently, ICI_BW is per-device."""
     pb, eb = tr.comm_bytes_per_epoch()
-    return (pb + eb) / ICI_BW
+    return (pb + eb) / tr.pg.plan.n_parts / ICI_BW
 
 
 def save(name: str, record: dict):

@@ -19,8 +19,8 @@ def run() -> dict:
         for model_name in ("graphsage", "gcn"):
             tr = common.make_trainer(ds, model_name, parts=8,
                                      mode="vanilla", bits=32)
-            pb, eb = tr.comm_bytes_per_epoch()
-            comm_s = (pb + eb) / ICI_BW
+            pb, eb = tr.comm_bytes_per_epoch()   # totals across partitions
+            comm_s = (pb + eb) / tr.pg.plan.n_parts / ICI_BW
             g, _ = common.build_dataset(ds)
             flops = _gnn_model_flops(model_name, tr.model, g.n_nodes,
                                      g.n_edges, g.x.shape[1], True) / 8

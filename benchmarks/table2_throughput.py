@@ -20,8 +20,8 @@ EPOCHS = 40
 
 
 def _modeled_epoch_s(tr, model_name, overlap: bool) -> float:
-    pb, eb = tr.comm_bytes_per_epoch()
-    comm = (pb + eb) / ICI_BW
+    pb, eb = tr.comm_bytes_per_epoch()   # totals across partitions
+    comm = (pb + eb) / tr.pg.plan.n_parts / ICI_BW
     g, _ = common.build_dataset("planted-sm")
     flops = _gnn_model_flops(model_name, tr.model, g.n_nodes, g.n_edges,
                              g.x.shape[1], True) / tr.pg.plan.n_parts

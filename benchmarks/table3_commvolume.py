@@ -1,6 +1,9 @@
 """Table 3: per-epoch communication volume (main payload + error-compensated
-info) and epoch time, vanilla vs Sylvie-S. Bytes are exact (independent of
-hardware); the ~32x payload reduction is the paper's headline number.
+info) and epoch time, vanilla vs Sylvie-S. Bytes are exact *true wire* counts
+(independent of hardware): diagonal self-blocks and padding rows are excluded
+by ``exchange_bytes``, so the table reports what actually crosses the
+interconnect. The ~32x payload reduction is the paper's headline number and is
+padding-invariant (both methods ship the same rows; only bits/value change).
 """
 from __future__ import annotations
 

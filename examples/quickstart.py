@@ -51,7 +51,8 @@ def main() -> None:
     # 3. Graph Engine: partition + halo plan (paper step 1)
     pg = repro.partition(g, runtime=runtime)
     print(f"[{ARGS.runtime}] partitioned: {pg.plan.n_parts} parts, "
-          f"n_local={pg.plan.n_local}, halo slots/pair={pg.plan.h_pad}, "
+          f"n_local={pg.plan.n_local}, {pg.plan.layout} halo layout "
+          f"({pg.plan.halo_rows} rows/part, worst pair={pg.plan.h_pad}), "
           f"pad efficiency={pg.plan.pad_efficiency():.2f}")
 
     # 4. model + Sylvie-S runtime (quantize -> exchange -> dequantize)

@@ -32,7 +32,8 @@ from .train.trainer import GNNTrainer
 def partition(g: formats.Graph, n_parts: Optional[int] = None, *,
               runtime: Optional[Runtime] = None, method: str = "block",
               self_loops: bool = True, gcn_weights: bool = True,
-              seed: int = 0) -> partlib.PartitionedGraph:
+              seed: int = 0, layout: str = "compact",
+              alignment: int = 8) -> partlib.PartitionedGraph:
     """Partition a host graph + build its static halo-exchange plan.
 
     ``n_parts`` may be given directly or inferred from ``runtime`` (mesh size /
@@ -40,6 +41,8 @@ def partition(g: formats.Graph, n_parts: Optional[int] = None, *,
     self-loops added and symmetric-normalized edge weights attached. A graph
     carrying ``edge_attr`` keeps it; the appended self-loop edges get
     zero-valued attribute rows (matching the zero-length geometric edge).
+    ``layout`` picks the halo buffer layout ("compact" ring buckets by default;
+    "dense" pairwise blocks for comparison/debugging — see graph/partition.py).
     """
     if n_parts is None and runtime is not None:
         n_parts = runtime.n_parts
@@ -56,7 +59,8 @@ def partition(g: formats.Graph, n_parts: Optional[int] = None, *,
     ew = formats.gcn_edge_weights(ei, g.n_nodes) if gcn_weights else None
     g = dataclasses.replace(g, edge_index=ei, edge_attr=ea)
     return partlib.partition_graph(g, n_parts, method=method,
-                                   edge_weight=ew, seed=seed)
+                                   edge_weight=ew, seed=seed,
+                                   layout=layout, alignment=alignment)
 
 
 def train(model, pg: partlib.PartitionedGraph,

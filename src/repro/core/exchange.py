@@ -3,17 +3,23 @@
 All GNN runtime code operates on *stacked* arrays with a leading partition axis
 ``P`` — e.g. node features ``(P, n_local, d)``. *Which* collective moves the
 halo buffers is a :class:`repro.dist.backend.HaloBackend` decision — the
-simulated stacked transpose or the shard_map ``lax.all_to_all`` (or any future
-communicator) — and this module is the seam: :func:`exchange` /
-:func:`exchange_quantized` accept a backend (or a legacy axis-name designator,
-normalized via ``as_backend``) and delegate to it.
+simulated stacked transpose/roll or the shard_map ``all_to_all``/``ppermute``
+(or any future communicator) — and this module is the seam.
 
-The exchange permutation is an involution (a transpose), so the backward
-communication (Alg. 2) reuses the same primitive.
+Two buffer layouts exist (see ``graph/partition.py``):
+
+* dense pairwise blocks ``(P, P*h_pad, ...)`` — the exchange is a transpose
+  (an involution), so forward and backward communication share one primitive;
+* compact ring buckets ``(P, R, ...)`` with ``R = sum(bucket_sizes)`` — bucket
+  ``k`` moves ``p -> (p+k) % P``. Reversing the rings undoes it, so the
+  backward communication (Alg. 2) calls :func:`exchange_halo` with
+  ``reverse=True``. The layout is carried statically on :class:`PlanArrays`
+  (``bucket_sizes``), so one code path in ``core/sylvie.py`` serves both.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -26,44 +32,71 @@ from .quantization import QuantizedTensor
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class PlanArrays:
-    """Device-side halo plan (stacked, leading axis P). See graph/partition.py."""
+    """Device-side halo plan (stacked, leading axis P). See graph/partition.py.
 
-    send_idx: jax.Array   # (P, P*h_pad) int32 — local rows to send, pairwise blocks
-    send_mask: jax.Array  # (P, P*h_pad) bool
-    recv_mask: jax.Array  # (P, P*h_pad) bool
+    ``bucket_sizes`` is ``None`` for the dense pairwise layout and a static
+    per-ring-offset row-count tuple for the compact layout. ``wire_rows`` /
+    ``real_rows`` are exchange-accounting constants (totals across partitions):
+    rows the layout actually ships vs. true unpadded off-diagonal halo rows.
+    """
+
+    send_idx: jax.Array   # (P, rows) int32 — local rows to send, blocked/bucketed
+    send_mask: jax.Array  # (P, rows) bool
+    recv_mask: jax.Array  # (P, rows) bool
     n_local: int = dataclasses.field(metadata=dict(static=True))
     h_pad: int = dataclasses.field(metadata=dict(static=True))
     n_parts: int = dataclasses.field(metadata=dict(static=True))
+    bucket_sizes: Optional[tuple[int, ...]] = dataclasses.field(
+        default=None, metadata=dict(static=True))
+    wire_rows: int = dataclasses.field(default=0, metadata=dict(static=True))
+    real_rows: int = dataclasses.field(default=0, metadata=dict(static=True))
+
+    @property
+    def halo_rows(self) -> int:
+        """Rows of one partition's halo buffer (dense: P*h_pad; compact: R)."""
+        return int(self.send_idx.shape[1])
 
     @staticmethod
     def from_plan(plan) -> "PlanArrays":
         p = plan
+        buckets = None
+        if getattr(p, "layout", "dense") == "compact":
+            buckets = tuple(int(b) for b in p.bucket_sizes)
         return PlanArrays(
             send_idx=jnp.asarray(p.send_idx.reshape(p.n_parts, -1), jnp.int32),
             send_mask=jnp.asarray(p.send_mask.reshape(p.n_parts, -1)),
             recv_mask=jnp.asarray(p.recv_mask),
-            n_local=int(p.n_local), h_pad=int(p.h_pad), n_parts=int(p.n_parts))
+            n_local=int(p.n_local), h_pad=int(p.h_pad), n_parts=int(p.n_parts),
+            bucket_sizes=buckets, wire_rows=int(p.wire_rows()),
+            real_rows=int(p.real_rows()))
 
     @staticmethod
     def from_spec(spec) -> "PlanArrays":
-        """ShapeDtypeStruct stand-ins for the dry-run (no allocation)."""
+        """ShapeDtypeStruct stand-ins for the dry-run (no allocation). Analytic
+        specs size the dense layout; wire/real rows fall back to the
+        off-diagonal dense estimate (no masks exist to count real rows)."""
         s = spec
         rows = s.n_parts * s.h_pad
+        wire = s.n_parts * (s.n_parts - 1) * s.h_pad
         return PlanArrays(
             send_idx=jax.ShapeDtypeStruct((s.n_parts, rows), jnp.int32),
             send_mask=jax.ShapeDtypeStruct((s.n_parts, rows), jnp.bool_),
             recv_mask=jax.ShapeDtypeStruct((s.n_parts, rows), jnp.bool_),
-            n_local=int(s.n_local), h_pad=int(s.h_pad), n_parts=int(s.n_parts))
+            n_local=int(s.n_local), h_pad=int(s.h_pad), n_parts=int(s.n_parts),
+            bucket_sizes=None, wire_rows=wire, real_rows=wire)
 
 
 def gather_boundary(h: jax.Array, plan: PlanArrays) -> jax.Array:
-    """(P, n_local, d) -> (P, P*h_pad, d) send buffer (masked)."""
+    """(P, n_local, d) -> (P, rows, d) packed send buffer (masked).
+
+    ``plan.send_idx`` is the compaction permutation: for the compact layout the
+    output has no dead pairwise blocks, only per-bucket alignment tails."""
     buf = jnp.take_along_axis(h, plan.send_idx[..., None], axis=1)
     return jnp.where(plan.send_mask[..., None], buf, 0)
 
 
 def scatter_boundary_grad(g: jax.Array, plan: PlanArrays) -> jax.Array:
-    """(P, P*h_pad, d) received grads -> (P, n_local, d) scatter-add onto owners.
+    """(P, rows, d) received grads -> (P, n_local, d) scatter-add onto owners.
 
     A node sent to multiple partitions accumulates all their gradients (sum) —
     Alg. 2 line 13."""
@@ -76,7 +109,8 @@ def scatter_boundary_grad(g: jax.Array, plan: PlanArrays) -> jax.Array:
 
 
 def exchange(x: jax.Array, backend=None) -> jax.Array:
-    """The halo all-to-all. ``x``: (P_local, P*h_pad, ...) pairwise-blocked buffer.
+    """The dense halo all-to-all. ``x``: (P_local, P*h_pad, ...) pairwise-blocked
+    buffer.
 
     ``backend`` is a :class:`~repro.dist.backend.HaloBackend`; ``None`` (the
     simulated stacked transpose) and bare axis names are accepted for
@@ -86,15 +120,46 @@ def exchange(x: jax.Array, backend=None) -> jax.Array:
 
 
 def exchange_quantized(qt: QuantizedTensor, backend=None) -> QuantizedTensor:
-    """Exchange a quantized payload: data + error-compensation (scale, zero) move
-    together (paper §3.2 Communicator)."""
+    """Exchange a dense quantized payload: data + error-compensation (scale,
+    zero) move together (paper §3.2 Communicator)."""
     return as_backend(backend).exchange_quantized(qt)
+
+
+def exchange_halo(x: jax.Array, plan: PlanArrays, backend=None,
+                  reverse: bool = False) -> jax.Array:
+    """Layout-dispatching halo exchange. Dense plans use the transpose
+    (self-inverse, ``reverse`` ignored); compact plans run the ring buckets,
+    reversed for the backward communication."""
+    be = as_backend(backend)
+    if plan.bucket_sizes is None:
+        return be.exchange(x)
+    return be.exchange_compact(x, plan.bucket_sizes, reverse=reverse)
+
+
+def exchange_quantized_halo(qt: QuantizedTensor, plan: PlanArrays, backend=None,
+                            reverse: bool = False) -> QuantizedTensor:
+    """Layout-dispatching quantized exchange (payload + scale/zero together)."""
+    be = as_backend(backend)
+    if plan.bucket_sizes is None:
+        return be.exchange_quantized(qt)
+    return be.exchange_quantized_compact(qt, plan.bucket_sizes, reverse=reverse)
 
 
 def exchange_bytes(plan: PlanArrays, d: int, bits: int,
                    scale_dtype=jnp.bfloat16) -> tuple[int, int]:
-    """(payload, error-compensation) bytes moved per exchange per partition —
+    """(payload, error-compensation) *true wire* bytes per exchange, totaled
+    across partitions: diagonal self-blocks and padding rows are excluded —
     the Table-3 accounting and the roofline collective term."""
     from .quantization import comm_bytes
-    rows = plan.n_parts * plan.h_pad
-    return comm_bytes(rows, d, bits, scale_dtype)
+    return comm_bytes(plan.real_rows, d, bits, scale_dtype)
+
+
+def wire_bytes(plan: PlanArrays, d: int, bits: int,
+               scale_dtype=jnp.bfloat16) -> tuple[int, int]:
+    """(payload, error-compensation) bytes this plan's layout actually ships per
+    exchange, totaled across partitions — includes per-bucket alignment tails
+    (compact) or pairwise padding to the global max (dense), but never the
+    diagonal. ``wire_bytes - exchange_bytes`` is the padding overhead the
+    compact layout exists to eliminate."""
+    from .quantization import comm_bytes
+    return comm_bytes(plan.wire_rows, d, bits, scale_dtype)

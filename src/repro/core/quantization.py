@@ -20,9 +20,19 @@ Bit-widths:
   * b = 16: bf16 passthrough (no scale/zero).
   * b = 32: fp32 passthrough (identity — the "vanilla" baseline).
 
-This file is the pure-jnp implementation used everywhere by default. The Pallas TPU
-kernel (``repro.kernels.quant``) implements the fused quantize+pack / unpack+dequantize
-hot path and is validated against this module.
+Implementation dispatch (the hot-path seam): :func:`quantize` / :func:`dequantize`
+take an ``impl`` designator —
+
+  * ``"jnp"``    — the pure-jnp reference path (always available, any bit-width);
+  * ``"pallas"`` — the fused one-HBM-pass Pallas kernel (``repro.kernels.quant``:
+    min/max reduce -> affine scale -> stochastic round -> bit-pack in one VMEM
+    pass) for packable bit-widths {1, 2, 4, 8} with stochastic rounding; runs
+    interpret mode off-TPU so tests/benchmarks can validate it anywhere;
+  * ``"auto"`` / ``None`` — Pallas on a TPU backend, jnp elsewhere.
+
+Both paths draw the same ``jax.random.uniform(key, h.shape)`` noise, so they are
+bit-identical in interpret mode. Cases the kernel does not cover (passthrough or
+odd bit-widths, deterministic rounding, scalar rows) silently fall back to jnp.
 """
 from __future__ import annotations
 
@@ -36,6 +46,17 @@ import numpy as np
 
 PACKABLE_BITS = (1, 2, 4)
 PASSTHROUGH_BITS = (16, 32)
+PALLAS_BITS = (1, 2, 4, 8)        # widths the fused kernel implements
+QUANT_IMPLS = ("auto", "jnp", "pallas")
+
+
+def resolve_impl(impl: Optional[str] = None) -> str:
+    """Resolve an ``impl`` designator to a concrete path ("jnp" | "pallas")."""
+    if impl in (None, "auto"):
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if impl not in ("jnp", "pallas"):
+        raise ValueError(f"unknown quantize impl {impl!r}; pick from {QUANT_IMPLS}")
+    return impl
 
 
 @jax.tree_util.register_dataclass
@@ -118,13 +139,53 @@ def theoretical_variance(h: jax.Array, bits: int) -> jax.Array:
     return h.shape[-1] * rng**2 / (6.0 * b**2)
 
 
+def _rows(h: jax.Array) -> int:
+    n = 1
+    for s in h.shape[:-1]:
+        n *= s
+    return n
+
+
+def _pallas_can_quantize(h, bits, key, stochastic) -> bool:
+    return (bits in PALLAS_BITS and stochastic and key is not None
+            and h.ndim >= 2 and h.shape[-1] > 0 and _rows(h) > 0)
+
+
+def _quantize_pallas(h, bits, key, scale_dtype) -> QuantizedTensor:
+    """Fused quantize+bitpack: one HBM read of the buffer, one packed write."""
+    from ..kernels.quant import ops as kops
+    d = h.shape[-1]
+    lead = h.shape[:-1]
+    # same noise stream as the jnp path (drawn at the unflattened shape) so the
+    # two impls are bit-identical given one key
+    u = jax.random.uniform(key, h.shape, dtype=jnp.float32)
+    packed, scale, zero = kops.quantize_pack_rows(
+        h.astype(jnp.float32).reshape(-1, d), u.reshape(-1, d), bits)
+    return QuantizedTensor(packed.reshape(lead + (packed.shape[-1],)),
+                           scale.reshape(lead).astype(scale_dtype),
+                           zero.reshape(lead).astype(scale_dtype), bits, d)
+
+
+def _dequantize_pallas(qt: QuantizedTensor, out_dtype) -> jax.Array:
+    from ..kernels.quant import ops as kops
+    w = qt.data.shape[-1]
+    lead = qt.data.shape[:-1]
+    out = kops.dequantize_rows(qt.data.reshape(-1, w),
+                               qt.scale.reshape(-1).astype(jnp.float32),
+                               qt.zero.reshape(-1).astype(jnp.float32),
+                               qt.bits, qt.feat_dim)
+    return out.reshape(lead + (qt.feat_dim,)).astype(out_dtype)
+
+
 def quantize(h: jax.Array, bits: int, key: Optional[jax.Array] = None,
              stochastic: bool = True,
-             scale_dtype: jnp.dtype = jnp.bfloat16) -> QuantizedTensor:
+             scale_dtype: jnp.dtype = jnp.bfloat16,
+             impl: Optional[str] = None) -> QuantizedTensor:
     """Quantize ``h`` (..., D) to ``bits``-bit integers per Equ. 3-4.
 
     ``key`` is required when ``stochastic`` (training); deterministic
-    round-to-nearest otherwise (eval / debugging).
+    round-to-nearest otherwise (eval / debugging). ``impl`` picks the
+    implementation (see module docstring); unsupported cases fall back to jnp.
     """
     d = h.shape[-1]
     if bits == 32:
@@ -133,6 +194,9 @@ def quantize(h: jax.Array, bits: int, key: Optional[jax.Array] = None,
     if bits == 16:
         return QuantizedTensor(h.astype(jnp.bfloat16), jnp.zeros(h.shape[:-1] + (0,)),
                                jnp.zeros(h.shape[:-1] + (0,)), 16, d)
+    if resolve_impl(impl) == "pallas" and _pallas_can_quantize(h, bits, key,
+                                                               stochastic):
+        return _quantize_pallas(h, bits, key, scale_dtype)
 
     big = 2.0 ** bits - 1.0
     h = h.astype(jnp.float32)
@@ -157,10 +221,14 @@ def quantize(h: jax.Array, bits: int, key: Optional[jax.Array] = None,
     return QuantizedTensor(packed, scale, zero, bits, d)
 
 
-def dequantize(qt: QuantizedTensor, out_dtype: jnp.dtype = jnp.float32) -> jax.Array:
+def dequantize(qt: QuantizedTensor, out_dtype: jnp.dtype = jnp.float32,
+               impl: Optional[str] = None) -> jax.Array:
     """Recover full-precision values per Equ. 5 (unbiased given Equ. 4)."""
     if qt.bits in PASSTHROUGH_BITS:
         return qt.data.astype(out_dtype)
+    if (resolve_impl(impl) == "pallas" and qt.bits in PALLAS_BITS
+            and qt.data.ndim >= 2 and _rows(qt.data) > 0 and qt.feat_dim > 0):
+        return _dequantize_pallas(qt, out_dtype)
     vals = unpack_bits(qt.data, qt.bits, qt.feat_dim).astype(jnp.float32)
     out = vals * qt.scale[..., None].astype(jnp.float32) \
         + qt.zero[..., None].astype(jnp.float32)

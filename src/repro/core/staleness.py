@@ -34,7 +34,7 @@ class HaloState:
     def zeros(plan: PlanArrays, dims: Sequence[int], dtype=jnp.float32,
               stacked_parts: int | None = None) -> "HaloState":
         p = stacked_parts if stacked_parts is not None else plan.n_parts
-        rows = plan.n_parts * plan.h_pad
+        rows = plan.halo_rows
         feats = tuple(jnp.zeros((p, rows, d), dtype) for d in dims)
         return HaloState(feats=feats, grads=tuple(jnp.zeros_like(f) for f in feats))
 
@@ -43,7 +43,7 @@ class HaloState:
                    stacked_parts: int | None = None) -> "HaloState":
         """ShapeDtypeStruct version for the dry-run."""
         p = stacked_parts if stacked_parts is not None else plan.n_parts
-        rows = plan.n_parts * plan.h_pad
+        rows = plan.halo_rows
         feats = tuple(jax.ShapeDtypeStruct((p, rows, d), dtype) for d in dims)
         return HaloState(feats=feats,
                          grads=tuple(jax.ShapeDtypeStruct(f.shape, f.dtype)

@@ -14,6 +14,18 @@ Three communication modes (paper §3):
   surfaces as the gradient of a zero-valued ``gslot`` input, becoming the
   next step's ``grad_in`` (one-step-stale boundary gradients).
 
+Buffer layout and quantizer implementation are both plan/config decisions made
+here once for every site:
+
+* the exchange direction matters for compact (ring-bucket) plans — the forward
+  exchange and the backward communication run opposite ring directions
+  (``exchange_halo(..., reverse=True)``); dense plans are involutions and
+  ignore the flag;
+* ``SylvieConfig.quant_impl`` picks the Low-bit-Module implementation
+  ("auto" = fused Pallas kernel on TPU, jnp elsewhere) — only the live rows of
+  the compacted buffer are quantized, so Low-bit-Module FLOPs track the actual
+  boundary set, not the padded worst case (paper §4.4 overhead budget).
+
 The *Bounded Staleness Adaptor* (paper §3.3) lives in ``core/staleness.py`` /
 ``train/trainer.py``: every ``eps_s`` epochs one synchronous step refreshes all
 caches.
@@ -28,8 +40,8 @@ import jax.numpy as jnp
 
 from ..dist.backend import as_backend
 from . import quantization as qlib
-from .exchange import (PlanArrays, exchange, exchange_quantized, gather_boundary,
-                       scatter_boundary_grad)
+from .exchange import (PlanArrays, exchange_halo, exchange_quantized_halo,
+                       gather_boundary, scatter_boundary_grad)
 
 Mode = str  # "vanilla" | "sync" | "async"
 
@@ -40,6 +52,9 @@ class SylvieConfig:
     bits: int = 1
     stochastic: bool = True
     scale_dtype: jnp.dtype = jnp.bfloat16
+    # Low-bit Module implementation: "auto" (Pallas fused kernel on TPU, jnp
+    # elsewhere) | "jnp" | "pallas" (interpret mode off-TPU).
+    quant_impl: str = "auto"
     # BNS-GCN baseline (Wan et al. 2022a): random boundary-node sampling.
     # Each epoch keeps a (1-p) fraction of halo rows, scaled by 1/(1-p);
     # p=0 disables. Used by the Table-2 baseline comparison.
@@ -53,35 +68,40 @@ class SylvieConfig:
         return dataclasses.replace(self, **kw)
 
 
-def _q_roundtrip(buf, key, bits, stochastic, scale_dtype, backend):
-    """quantize -> exchange -> dequantize (one direction of the Low-bit Module)."""
-    qt = qlib.quantize(buf, bits, key, stochastic, scale_dtype)
-    qr = exchange_quantized(qt, backend)
-    return qlib.dequantize(qr)
+def _q_roundtrip(buf, key, bits, stochastic, scale_dtype, backend, plan,
+                 reverse=False, impl="auto"):
+    """quantize -> exchange -> dequantize (one direction of the Low-bit Module).
+    ``reverse`` flips the ring direction for compact plans (backward comm)."""
+    qt = qlib.quantize(buf, bits, key, stochastic, scale_dtype, impl=impl)
+    qr = exchange_quantized_halo(qt, plan, backend, reverse=reverse)
+    return qlib.dequantize(qr, impl=impl)
 
 
 # ---------------------------------------------------------------------------
 # Sylvie-S: synchronous quantized exchange with quantized backward communication
 # ---------------------------------------------------------------------------
-@partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+@partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8))
 def quantized_halo(h, plan: PlanArrays, fwd_key, bwd_key,
-                   bits: int, stochastic: bool, scale_dtype, backend):
-    """(P, n_local, d) -> (P, P*h_pad, d) dequantized halo features."""
+                   bits: int, stochastic: bool, scale_dtype, backend, impl):
+    """(P, n_local, d) -> (P, halo_rows, d) dequantized halo features."""
     buf = gather_boundary(h, plan)
-    out = _q_roundtrip(buf, fwd_key, bits, stochastic, scale_dtype, backend)
+    out = _q_roundtrip(buf, fwd_key, bits, stochastic, scale_dtype, backend,
+                       plan, impl=impl)
     return jnp.where(plan.recv_mask[..., None], out, 0)
 
 
-def _qh_fwd(h, plan, fwd_key, bwd_key, bits, stochastic, scale_dtype, backend):
+def _qh_fwd(h, plan, fwd_key, bwd_key, bits, stochastic, scale_dtype, backend,
+            impl):
     out = quantized_halo(h, plan, fwd_key, bwd_key,
-                         bits, stochastic, scale_dtype, backend)
+                         bits, stochastic, scale_dtype, backend, impl)
     return out, (plan, bwd_key)
 
 
-def _qh_bwd(bits, stochastic, scale_dtype, backend, res, g):
+def _qh_bwd(bits, stochastic, scale_dtype, backend, impl, res, g):
     plan, bwd_key = res
     g = jnp.where(plan.recv_mask[..., None], g, 0)
-    back = _q_roundtrip(g, bwd_key, bits, stochastic, scale_dtype, backend)
+    back = _q_roundtrip(g, bwd_key, bits, stochastic, scale_dtype, backend,
+                        plan, reverse=True, impl=impl)
     grad_h = scatter_boundary_grad(back, plan)
     return (grad_h, None, None, None)
 
@@ -92,18 +112,20 @@ quantized_halo.defvjp(_qh_fwd, _qh_bwd)
 # ---------------------------------------------------------------------------
 # Sylvie-A: stale halo consumption + fresh exchange emission
 # ---------------------------------------------------------------------------
-def fresh_halo(h, plan: PlanArrays, key, bits, stochastic, scale_dtype, backend):
+def fresh_halo(h, plan: PlanArrays, key, bits, stochastic, scale_dtype, backend,
+               impl="auto"):
     """The concurrent forward exchange: quantize this step's boundary features and
     deliver them as *next* step's cache. Detached — no gradient flows (staleness
     is handled by the grad_in path)."""
     buf = gather_boundary(jax.lax.stop_gradient(h), plan)
-    out = _q_roundtrip(buf, key, bits, stochastic, scale_dtype, backend)
+    out = _q_roundtrip(buf, key, bits, stochastic, scale_dtype, backend,
+                       plan, impl=impl)
     return jnp.where(plan.recv_mask[..., None], out, 0)
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8, 9))
+@partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8, 9, 10))
 def stale_halo(h, feat_cache, grad_in, gslot, plan: PlanArrays, bwd_key,
-               bits: int, stochastic: bool, scale_dtype, backend):
+               bits: int, stochastic: bool, scale_dtype, backend, impl):
     """Consume the stale halo; wire the staleness dataflow into autodiff.
 
     * primal output  = ``feat_cache`` (previous step's dequantized halo features)
@@ -117,14 +139,15 @@ def stale_halo(h, feat_cache, grad_in, gslot, plan: PlanArrays, bwd_key,
 
 
 def _sh_fwd(h, feat_cache, grad_in, gslot, plan, bwd_key,
-            bits, stochastic, scale_dtype, backend):
+            bits, stochastic, scale_dtype, backend, impl):
     return feat_cache, (plan, grad_in, bwd_key)
 
 
-def _sh_bwd(bits, stochastic, scale_dtype, backend, res, g):
+def _sh_bwd(bits, stochastic, scale_dtype, backend, impl, res, g):
     plan, grad_in, bwd_key = res
     g = jnp.where(plan.recv_mask[..., None], g, 0)
-    fresh_grad = _q_roundtrip(g, bwd_key, bits, stochastic, scale_dtype, backend)
+    fresh_grad = _q_roundtrip(g, bwd_key, bits, stochastic, scale_dtype,
+                              backend, plan, reverse=True, impl=impl)
     fresh_grad = jnp.where(plan.send_mask[..., None], fresh_grad, 0)
     grad_h = scatter_boundary_grad(grad_in, plan)
     return (grad_h, None, None, fresh_grad, None, None)
@@ -182,7 +205,7 @@ class SylvieComm:
         bits = cfg.effective_bits
         if cfg.mode in ("vanilla", "sync"):
             halo = quantized_halo(h, self.plan, kf, kb, bits, cfg.stochastic,
-                                  cfg.scale_dtype, self.backend)
+                                  cfg.scale_dtype, self.backend, cfg.quant_impl)
             bns = self._bns_mask(jax.random.fold_in(key, 999))
             if bns is not None:
                 halo = halo * bns[..., None]
@@ -193,10 +216,10 @@ class SylvieComm:
         # async: consume stale, emit fresh
         halo = stale_halo(h, self.feat_caches[i], self.grad_ins[i], self.gslots[i],
                           self.plan, kb, bits, cfg.stochastic, cfg.scale_dtype,
-                          self.backend)
+                          self.backend, cfg.quant_impl)
         self.new_feat_caches.append(
             fresh_halo(h, self.plan, kf, bits, cfg.stochastic,
-                       cfg.scale_dtype, self.backend))
+                       cfg.scale_dtype, self.backend, cfg.quant_impl))
         return halo
 
     @property

@@ -14,7 +14,10 @@ Sharding contract (one partition per device):
     step functions all-reduce weight gradients with an explicit
     ``backend.psum`` (Alg. 2 line 16) — do not remove that psum.
   * halo caches, graph block arrays, features/labels/masks — sharded on the
-    leading partition axis over every mesh axis (``P(axes)``).
+    leading partition axis over every mesh axis (``P(axes)``). This covers
+    both halo-buffer layouts: dense ``(P, P*h_pad, d)`` and compact
+    ``(P, sum(bucket_sizes), d)`` buffers shard identically (the layout lives
+    in ``PlanArrays``' static metadata, not in the spec tree).
   * PRNG keys and scalar losses — replicated.
 
 Structure-only: spec trees are built from the state/block *instances* (pytree

@@ -16,11 +16,23 @@ hard-coding a collective. Two concrete backends implement it:
   exchange is a single tiled ``jax.lax.all_to_all`` over the halo-buffer axis,
   which implements exactly the same transpose across devices.
 
+Both backends speak two buffer layouts:
+
+* dense pairwise blocks ``(P, P*h_pad, ...)`` — ``exchange`` is the transpose
+  ``out[p, q*h+s] = in[q, p*h+s]`` (simulated: a stacked reshape/swap; shard_map:
+  one tiled ``all_to_all``). It is an involution, so forward and backward
+  communication share it.
+* compact ring buckets ``(P, sum(bucket_sizes), ...)`` — ``exchange_compact``
+  moves bucket ``k`` from ``p`` to ``(p+k) % P`` (simulated: a stacked
+  ``jnp.roll`` per bucket; shard_map: one ``ppermute`` per bucket). Ragged
+  bucket sizes break the involution; ``reverse=True`` runs the inverted rings
+  for the backward communication (Alg. 2).
+
 Backends are frozen dataclasses: hashable and comparable, so they can ride
 through ``jax.custom_vjp`` nondiff argnums and key jit caches (see
-``core/sylvie.py``). Later communication strategies (ragged exchanges,
-pairwise NCCL-style sends, adaptive per-message bit-widths à la AdaQP) plug in
-as new implementations of this protocol without touching model code.
+``core/sylvie.py``). Later communication strategies (pairwise NCCL-style
+sends, adaptive per-message bit-widths à la AdaQP) plug in as new
+implementations of this protocol without touching model code.
 
 See DESIGN.md §1 for the full contract.
 """
@@ -49,8 +61,12 @@ class HaloBackend(Protocol):
       * ``exchange(buf)``            — the halo all-to-all on a pairwise-blocked
         buffer ``(P_local, P*h_pad, ...)``. An involution (a transpose), so the
         backward communication (Alg. 2) reuses the same primitive.
-      * ``exchange_quantized(qt)``   — exchange a quantized payload; data and
-        error-compensation (scale, zero) move together.
+      * ``exchange_compact(buf, bucket_sizes, reverse)`` — the ragged ring
+        exchange on a compacted buffer ``(P_local, sum(bucket_sizes), ...)``;
+        ``reverse=True`` inverts the rings (backward communication).
+      * ``exchange_quantized(qt)`` / ``exchange_quantized_compact(qt, ...)`` —
+        exchange a quantized payload; data and error-compensation (scale,
+        zero) move together.
       * ``psum(x)``                  — all-reduce across partitions (Alg. 2
         line 16); identity in the simulated stack.
       * ``axis_index()``             — traced flat partition index, or ``None``
@@ -65,7 +81,14 @@ class HaloBackend(Protocol):
 
     def exchange(self, buf: jax.Array) -> jax.Array: ...
 
+    def exchange_compact(self, buf: jax.Array, bucket_sizes: tuple[int, ...],
+                         reverse: bool = False) -> jax.Array: ...
+
     def exchange_quantized(self, qt: QuantizedTensor) -> QuantizedTensor: ...
+
+    def exchange_quantized_compact(self, qt: QuantizedTensor,
+                                   bucket_sizes: tuple[int, ...],
+                                   reverse: bool = False) -> QuantizedTensor: ...
 
     def psum(self, x: jax.Array) -> jax.Array: ...
 
@@ -76,16 +99,27 @@ class HaloBackend(Protocol):
     def shard(self, fn, in_specs=None, out_specs=None): ...
 
 
-def _exchange_quantized(backend: "HaloBackend", qt: "QuantizedTensor") -> "QuantizedTensor":
-    """Shared payload+error-compensation exchange (paper §3.2 Communicator)."""
+def _exchange_quantized(exch, qt: "QuantizedTensor") -> "QuantizedTensor":
+    """Shared payload+error-compensation exchange (paper §3.2 Communicator).
+    ``exch`` is the buffer-level exchange closure (dense or compact)."""
     # deferred import: this module must stay a leaf below repro.core so either
     # package can be imported first (core.exchange imports us at module level)
     from ..core.quantization import QuantizedTensor
     return QuantizedTensor(
-        data=backend.exchange(qt.data),
-        scale=backend.exchange(qt.scale) if qt.scale.size else qt.scale,
-        zero=backend.exchange(qt.zero) if qt.zero.size else qt.zero,
+        data=exch(qt.data),
+        scale=exch(qt.scale) if qt.scale.size else qt.scale,
+        zero=exch(qt.zero) if qt.zero.size else qt.zero,
         bits=qt.bits, feat_dim=qt.feat_dim)
+
+
+def _bucket_slices(bucket_sizes: tuple[int, ...]):
+    """(ring offset k, start, stop) for each non-empty bucket."""
+    out, start = [], 0
+    for k, b in enumerate(bucket_sizes):
+        if b:
+            out.append((k, start, start + b))
+        start += b
+    return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,8 +139,22 @@ class SimulatedBackend:
         y = jnp.swapaxes(y, 0, 1)
         return y.reshape((p, p * h) + buf.shape[2:])
 
+    def exchange_compact(self, buf: jax.Array, bucket_sizes: tuple[int, ...],
+                         reverse: bool = False) -> jax.Array:
+        """Ring exchange on the stack: bucket k rolls k partitions forward
+        (out[p] = in[(p-k) % P]), or backward when reversed."""
+        parts = [jnp.roll(buf[:, s0:s1], -k if reverse else k, axis=0)
+                 for k, s0, s1 in _bucket_slices(bucket_sizes)]
+        return jnp.concatenate(parts, axis=1) if parts else buf
+
     def exchange_quantized(self, qt: QuantizedTensor) -> QuantizedTensor:
-        return _exchange_quantized(self, qt)
+        return _exchange_quantized(self.exchange, qt)
+
+    def exchange_quantized_compact(self, qt: QuantizedTensor,
+                                   bucket_sizes: tuple[int, ...],
+                                   reverse: bool = False) -> QuantizedTensor:
+        return _exchange_quantized(
+            lambda b: self.exchange_compact(b, bucket_sizes, reverse), qt)
 
     def psum(self, x: jax.Array) -> jax.Array:
         return x  # the stacked-axis contraction is already global
@@ -169,8 +217,30 @@ class ShardMapBackend:
         return jax.lax.all_to_all(buf, self.axis_names, split_axis=1,
                                   concat_axis=1, tiled=True)
 
+    def exchange_compact(self, buf: jax.Array, bucket_sizes: tuple[int, ...],
+                         reverse: bool = False) -> jax.Array:
+        """Ring exchange across devices: one ``ppermute`` per non-empty bucket
+        (bucket k: p -> (p+k) % P; inverted rings when reversed). Only the
+        aligned bucket rows ever hit the interconnect — no global-max padding,
+        no diagonal self-block."""
+        names = self.axis_names
+        axis = names[0] if len(names) == 1 else names  # tuple = flattened axes
+        p = len(bucket_sizes)
+        parts = []
+        for k, s0, s1 in _bucket_slices(bucket_sizes):
+            kk = (p - k) % p if reverse else k
+            perm = [(src, (src + kk) % p) for src in range(p)]
+            parts.append(jax.lax.ppermute(buf[:, s0:s1], axis, perm))
+        return jnp.concatenate(parts, axis=1) if parts else buf
+
     def exchange_quantized(self, qt: QuantizedTensor) -> QuantizedTensor:
-        return _exchange_quantized(self, qt)
+        return _exchange_quantized(self.exchange, qt)
+
+    def exchange_quantized_compact(self, qt: QuantizedTensor,
+                                   bucket_sizes: tuple[int, ...],
+                                   reverse: bool = False) -> QuantizedTensor:
+        return _exchange_quantized(
+            lambda b: self.exchange_compact(b, bucket_sizes, reverse), qt)
 
     def psum(self, x: jax.Array) -> jax.Array:
         return _rep_psum(x, self.axis_names)

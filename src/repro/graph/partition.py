@@ -1,17 +1,33 @@
 """Host-side graph partitioner + static halo-exchange plan (Sylvie's Graph Engine).
 
 Splits a global graph into ``P`` equal (padded) partitions, builds the HALO node
-sets (paper §2.2 / Alg. 1 lines 3-7), and emits a **static** exchange plan:
+sets (paper §2.2 / Alg. 1 lines 3-7), and emits a **static** exchange plan in one
+of two layouts:
 
-* ``send_idx[p, q, s]``  — local index (in partition ``p``) of the ``s``-th node that
-  ``p`` must send to ``q`` each layer. Pairwise blocks are padded to ``h_pad`` (the
-  max over all (p,q) pairs) so a single ``all_to_all`` moves everything.
-* a partition-local edge list whose ``src`` indices address the concatenated
-  ``[local_features ; halo_buffer]`` table: halo node received from ``q`` at slot
-  ``s`` lives at extended index ``n_local + q*h_pad + s``.
+* ``dense`` — the classic pairwise-blocked buffer: ``send_idx[p, q, s]`` is the
+  local index (in partition ``p``) of the ``s``-th node that ``p`` must send to
+  ``q``; every (p, q) block is padded to ``h_pad`` (the max over all pairs) so a
+  single ``all_to_all`` moves everything. Wire bytes scale with the *worst* pair
+  — badly skewed on power-law graphs — and the all-masked diagonal self-blocks
+  ride along for free.
+* ``compact`` (default) — ragged ring buckets: the send buffer of partition
+  ``p`` is the concatenation over ring offsets ``k = 1..P-1`` of the rows ``p``
+  sends to partition ``(p+k) % P``. Bucket ``k`` is sized to the *ring max*
+  ``max_p count[p -> (p+k)%P]`` rounded up to ``alignment`` rows (SPMD needs one
+  static shape per bucket, not per pair), the diagonal (``k = 0``) is dropped
+  from the wire entirely, and ``send_idx`` doubles as the compaction
+  permutation: ``gather_boundary`` produces a packed buffer with no dead
+  pairwise blocks. The exchange is one ``ppermute`` (or stacked roll) per
+  bucket; it is *not* an involution — the backward communication runs the
+  reversed rings (see ``core/exchange.py``).
 
-All arrays carry a leading partition axis ``P`` and are sharded one-partition-per-
-device by the runtime. The plan is partition-independent of the *model*; it is
+Either way the partition-local edge list's ``src`` indices address the
+concatenated ``[local_features ; halo_buffer]`` table: a halo node received
+from ``q`` at slot ``s`` lives at extended index ``n_local + q*h_pad + s``
+(dense) or ``n_local + bucket_start[(p-q) % P] + s`` (compact).
+
+All arrays carry a leading partition axis ``P`` and are sharded one-partition-
+per-device by the runtime. The plan is independent of the *model*; it is
 computed once per (graph, P) and reused every layer/epoch (as in the paper).
 """
 from __future__ import annotations
@@ -29,20 +45,40 @@ from .formats import Graph
 class HaloPlan:
     n_parts: int
     n_local: int
-    h_pad: int                    # per-(p,q) pairwise slot count
-    send_idx: np.ndarray          # (P, P, h_pad) int32
-    send_mask: np.ndarray         # (P, P, h_pad) bool
-    recv_mask: np.ndarray         # (P, P*h_pad) bool
+    h_pad: int                    # max per-(p,q) pairwise count (dense slot count)
+    send_idx: np.ndarray          # dense: (P, P, h_pad) int32; compact: (P, R)
+    send_mask: np.ndarray         # same shape as send_idx, bool
+    recv_mask: np.ndarray         # (P, halo_rows) bool
+    layout: str = "dense"         # "dense" | "compact"
+    bucket_sizes: Optional[np.ndarray] = None   # (P,) aligned ring-bucket rows
+    pair_counts: Optional[np.ndarray] = None    # (P_recv, P_send) true halo counts
+    alignment: int = 1
 
     @property
     def halo_rows(self) -> int:
+        """Rows of the (send or recv) halo buffer of one partition."""
+        if self.layout == "compact":
+            return int(self.bucket_sizes.sum())
         return self.n_parts * self.h_pad
 
+    def wire_rows(self) -> int:
+        """Rows this layout actually ships per exchange, totaled across all
+        partitions. Diagonal self-blocks never hit the wire (a real all_to_all
+        keeps the self-chunk local; the compact layout has no diagonal at all)."""
+        if self.layout == "compact":
+            return self.n_parts * self.halo_rows
+        return self.n_parts * (self.n_parts - 1) * self.h_pad
+
+    def real_rows(self) -> int:
+        """True (unpadded, off-diagonal) halo rows per exchange, all partitions."""
+        return int(self.send_mask.sum())
+
     def real_send_counts(self) -> np.ndarray:
-        return self.send_mask.sum(axis=(1, 2))  # (P,) true halo rows sent by each part
+        """(P,) true halo rows sent by each partition."""
+        return self.send_mask.reshape(self.n_parts, -1).sum(axis=1)
 
     def pad_efficiency(self) -> float:
-        """Fraction of exchanged rows that are real (1.0 = no padding waste)."""
+        """Fraction of buffered rows that are real (1.0 = no padding waste)."""
         total = self.send_mask.size
         return float(self.send_mask.sum()) / max(total, 1)
 
@@ -81,19 +117,33 @@ class PartitionedGraph:
 def assign_parts(g: Graph, n_parts: int, method: str = "block", seed: int = 0) -> np.ndarray:
     """Partition assignment. ``block`` = contiguous id ranges (our synthetic
     generators have id locality, so this approximates a METIS-quality cut);
-    ``random`` = hash partition (worst case, used to stress comm volume)."""
+    ``random`` = hash partition (worst case, used to stress comm volume);
+    ``skewed`` = contiguous blocks of geometrically decaying size (stress case
+    for per-pair halo imbalance — what the compact layout is built for)."""
     n = g.n_nodes
     if method == "block":
         return (np.arange(n) * n_parts // n).astype(np.int32)
     if method == "random":
         rng = np.random.default_rng(seed)
         return rng.integers(0, n_parts, n).astype(np.int32)
+    if method == "skewed":
+        w = 0.5 ** np.arange(n_parts)
+        bounds = np.ceil(np.cumsum(w / w.sum()) * n).astype(np.int64)
+        bounds[-1] = n
+        return np.searchsorted(bounds, np.arange(n), side="right").astype(np.int32)
     raise ValueError(method)
+
+
+def _align_up(x: np.ndarray, a: int) -> np.ndarray:
+    return -(-x // a) * a
 
 
 def partition_graph(g: Graph, n_parts: int, method: str = "block",
                     edge_weight: Optional[np.ndarray] = None,
-                    seed: int = 0) -> PartitionedGraph:
+                    seed: int = 0, layout: str = "compact",
+                    alignment: int = 8) -> PartitionedGraph:
+    if layout not in ("dense", "compact"):
+        raise ValueError(f"unknown halo layout {layout!r}")
     n = g.n_nodes
     src, dst = g.edge_index[0].astype(np.int64), g.edge_index[1].astype(np.int64)
     part_of = assign_parts(g, n_parts, method, seed)
@@ -127,19 +177,52 @@ def partition_graph(g: Graph, n_parts: int, method: str = "block",
     group_start_of = np.searchsorted(u_pair, np.arange(n_parts * n_parts))
     slot = np.arange(uniq.size) - group_start_of[u_pair]
     group_sizes = np.bincount(u_pair, minlength=n_parts * n_parts)
+    pair_counts = group_sizes.reshape(n_parts, n_parts)  # [recv p, send q]
     h_pad = max(1, int(group_sizes.max()) if uniq.size else 1)
-
-    send_idx = np.zeros((n_parts, n_parts, h_pad), dtype=np.int64)
-    send_mask = np.zeros((n_parts, n_parts, h_pad), dtype=bool)
     q_of = u_pair % n_parts          # owner / sender
     p_of = u_pair // n_parts         # receiver
-    send_idx[q_of, p_of, slot] = local_index[u_node]
-    send_mask[q_of, p_of, slot] = True
-    recv_mask = np.transpose(send_mask, (1, 0, 2)).reshape(n_parts, n_parts * h_pad)
+
+    bucket_sizes = None
+    if layout == "dense":
+        send_idx = np.zeros((n_parts, n_parts, h_pad), dtype=np.int64)
+        send_mask = np.zeros((n_parts, n_parts, h_pad), dtype=bool)
+        send_idx[q_of, p_of, slot] = local_index[u_node]
+        send_mask[q_of, p_of, slot] = True
+        recv_mask = np.transpose(send_mask, (1, 0, 2)).reshape(
+            n_parts, n_parts * h_pad)
+        # halo node from q at slot s -> extended index n_local + q*h_pad + s
+        halo_ext = n_local + p_src[is_halo] * h_pad + slot[inv]
+    else:
+        # ring bucket k holds what each p sends to (p+k)%P; sized to the ring
+        # max and lane-aligned so every partition shares one static shape.
+        ring = np.arange(n_parts)
+        ring_counts = np.zeros(n_parts, dtype=np.int64)
+        for k in range(1, n_parts):
+            ring_counts[k] = pair_counts[(ring + k) % n_parts, ring].max()
+        bucket_sizes = np.where(ring_counts > 0,
+                                _align_up(ring_counts, max(1, alignment)), 0)
+        bucket_sizes[0] = 0          # diagonal self-block: never on the wire
+        bstart = np.zeros(n_parts + 1, dtype=np.int64)
+        np.cumsum(bucket_sizes, out=bstart[1:])
+        rows = int(bucket_sizes.sum())
+        k_of = (p_of - q_of) % n_parts
+        send_idx = np.zeros((n_parts, rows), dtype=np.int64)
+        send_mask = np.zeros((n_parts, rows), dtype=bool)
+        pos = bstart[k_of] + slot
+        send_idx[q_of, pos] = local_index[u_node]
+        send_mask[q_of, pos] = True
+        # recv[p][bucket k] = send[(p-k)%P][bucket k]  (the ring exchange)
+        recv_mask = np.zeros_like(send_mask)
+        for k in range(1, n_parts):
+            if bucket_sizes[k] == 0:
+                continue
+            sl = slice(bstart[k], bstart[k] + bucket_sizes[k])
+            recv_mask[:, sl] = np.roll(send_mask[:, sl], k, axis=0)
+        # halo node from q at slot s -> n_local + bucket_start[(p-q)%P] + s
+        halo_ext = n_local + bstart[(p_dst[is_halo] - p_src[is_halo]) % n_parts] \
+            + slot[inv]
 
     # --- per-partition edge lists (ext src indexing) ---------------------------
-    halo_ext = np.empty(is_halo.sum(), dtype=np.int64)
-    halo_ext[:] = n_local + p_src[is_halo] * h_pad + slot[inv]
     src_ext = np.where(is_halo, 0, local_index[src])
     src_ext[is_halo] = halo_ext
     dst_loc = local_index[dst]
@@ -173,7 +256,10 @@ def partition_graph(g: Graph, n_parts: int, method: str = "block",
         return out
 
     plan = HaloPlan(n_parts, n_local, h_pad,
-                    send_idx.astype(np.int32), send_mask, recv_mask)
+                    send_idx.astype(np.int32), send_mask, recv_mask,
+                    layout=layout, bucket_sizes=bucket_sizes,
+                    pair_counts=pair_counts,
+                    alignment=alignment if layout == "compact" else 1)
     return PartitionedGraph(
         plan=plan, part_of=part_of, global_ids=global_ids, node_mask=node_mask,
         x=scatter_nodes(g.x),
@@ -189,6 +275,7 @@ def partition_graph(g: Graph, n_parts: int, method: str = "block",
 # Analytic plan *shapes* for the full-config dry-run (no 62M-edge graph is
 # materialized; .lower() only needs ShapeDtypeStructs). The model and its
 # parameters are documented in DESIGN.md §5 / EXPERIMENTS.md §Dry-run.
+# The dry-run sizes the dense layout (the conservative upper bound).
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
 class PartitionShapeSpec:

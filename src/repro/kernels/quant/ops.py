@@ -1,15 +1,15 @@
 """Jit'd wrapper tying the Pallas quant kernels to the Sylvie runtime contract.
 
-``quantize_rows`` / ``dequantize_rows`` mirror ``repro.core.quantization``'s
-(data, scale, zero) triple for the packable bit-widths {1, 2, 4, 8}. On a CPU
-backend the wrappers run interpret mode automatically (TPU executes the
+``quantize_pack_rows`` / ``dequantize_rows`` mirror ``repro.core.quantization``'s
+(data, scale, zero) triple for the packable bit-widths {1, 2, 4, 8}; they are
+the entry points ``core.quantization`` dispatches to (``impl="pallas"``). On a
+CPU backend the wrappers run interpret mode automatically (TPU executes the
 compiled kernel); correctness vs ``ref.py`` and vs ``core.quantization`` is
 enforced in tests/test_kernels.py.
 """
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from . import quant as _k
 from . import ref as _r
@@ -19,9 +19,11 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def quantize_rows(h: jax.Array, key: jax.Array, bits: int = 1):
-    """(rows, d) float -> (packed uint8, scale f32, zero f32), stochastic rounding."""
-    u = jax.random.uniform(key, h.shape, jnp.float32)
+def quantize_pack_rows(h: jax.Array, u: jax.Array, bits: int = 1):
+    """(rows, d) float + (rows, d) uniform[0,1) noise -> (packed uint8,
+    scale f32, zero f32). The noise is caller-supplied so the dispatch seam in
+    ``core.quantization`` draws it identically for both impls — the packed
+    payload is bit-identical to the jnp path given one PRNG key."""
     return _k.quantize_pack(h, u, bits=bits, interpret=_interpret())
 
 
@@ -31,9 +33,5 @@ def dequantize_rows(packed: jax.Array, scale: jax.Array, zero: jax.Array,
                                 interpret=_interpret())
 
 
-def quantize_rows_ref(h, key, bits: int = 1):
-    u = jax.random.uniform(key, h.shape, jnp.float32)
-    return _r.quantize_pack_ref(h, u, bits)
-
-
+quantize_pack_rows_ref = _r.quantize_pack_ref
 dequantize_rows_ref = _r.unpack_dequantize_ref

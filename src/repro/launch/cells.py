@@ -270,8 +270,9 @@ def _gnn_cell(spec: ArchSpec, cell: ShapeCell, mesh, *,
 
     from ..core.exchange import exchange_bytes
     dims = model.comm_dims()
-    payload = sum(exchange_bytes(block.plan, d, bits)[0] for d in dims)
-    ec = sum(exchange_bytes(block.plan, d, bits)[1] for d in dims)
+    # exchange_bytes totals across partitions; the cell meta reports per-device
+    payload = sum(exchange_bytes(block.plan, d, bits)[0] for d in dims) // p_n
+    ec = sum(exchange_bytes(block.plan, d, bits)[1] for d in dims) // p_n
     return Cell(spec.arch_id, cell.name, cell.step, fn, args, p_n,
                 _gnn_model_flops(arch.name, model, n, e, d_feat, True),
                 meta=dict(n_local=pspec.n_local, e_pad=pspec.e_pad,

@@ -50,9 +50,12 @@ def _axis_size(axis_name) -> int:
     return n
 
 
-def ef_allreduce(grads, state: EFState, key, bits: int = 1,
-                 axis_name=None):
+def ef_allreduce(grads, state: EFState, bits: int = 1, axis_name=None):
     """-> (mean-gradient estimate tree, new EFState).
+
+    Deterministic by construction: both compressors below are contractive
+    *deterministic* maps (stochastic rounding breaks EF21 — see the inline
+    note), so no PRNG key enters the signature.
 
     With ``axis_name=None`` (simulated / single-device) the wire is the
     identity and only the quantization noise path is exercised.
@@ -61,7 +64,7 @@ def ef_allreduce(grads, state: EFState, key, bits: int = 1,
     e_leaves = jax.tree_util.tree_flatten(state.error)[0]
     m_leaves = jax.tree_util.tree_flatten(state.estimate)[0]
     new_e, new_m = [], []
-    for i, (g, e, m) in enumerate(zip(leaves, e_leaves, m_leaves)):
+    for g, e, m in zip(leaves, e_leaves, m_leaves):
         g = g.astype(jnp.float32)
         innov = g - m + e
         flat = innov.reshape(-1, innov.shape[-1]) if innov.ndim > 1 \

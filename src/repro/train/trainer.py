@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.exchange import exchange_bytes
+from ..core.exchange import exchange_bytes, wire_bytes
 from ..core.staleness import use_sync_step
 from ..core.sylvie import SylvieConfig
 from ..dist.runtime import Runtime
@@ -95,17 +95,27 @@ class GNNTrainer:
         self._needs_sync = False
 
     # ------------------------------------------------------------------
-    def comm_bytes_per_epoch(self) -> tuple[float, float]:
-        """(payload, error-compensation) bytes moved per epoch per partition
-        x2 for forward + backward exchanges."""
+    def _bytes_per_epoch(self, bytes_fn) -> tuple[float, float]:
+        """x2 for forward + backward exchanges, summed over comm sites."""
         bits = self.cfg.effective_bits
         payload = ec = 0
         for d in self.model.comm_dims():
-            pb, eb = exchange_bytes(self.block.plan, d, bits,
-                                    self.cfg.scale_dtype)
+            pb, eb = bytes_fn(self.block.plan, d, bits, self.cfg.scale_dtype)
             payload += 2 * pb
             ec += 2 * eb
         return payload, ec
+
+    def comm_bytes_per_epoch(self) -> tuple[float, float]:
+        """(payload, error-compensation) *true wire* bytes moved per epoch,
+        totaled across partitions. Diagonal self-blocks and padding rows are
+        excluded (Table 3)."""
+        return self._bytes_per_epoch(exchange_bytes)
+
+    def wire_bytes_per_epoch(self) -> tuple[float, float]:
+        """Like :meth:`comm_bytes_per_epoch` but counting the rows the plan's
+        layout actually ships (incl. bucket-alignment / pairwise padding) —
+        the layout-efficiency number the compact plan optimizes."""
+        return self._bytes_per_epoch(wire_bytes)
 
     def _epoch_key(self):
         return jax.random.fold_in(self.key, self.epoch)

@@ -25,12 +25,15 @@ def _random_graph(n, e, seed):
 @settings(max_examples=25, deadline=None)
 @given(n=st.integers(8, 120), e=st.integers(1, 500), p=st.integers(1, 8),
        seed=st.integers(0, 10),
-       method=st.sampled_from(["block", "random"]))
-def test_partition_invariants(n, e, p, seed, method):
+       method=st.sampled_from(["block", "random", "skewed"]),
+       layout=st.sampled_from(["dense", "compact"]))
+def test_partition_invariants(n, e, p, seed, method, layout):
     """Every node appears exactly once; every edge lands in its dst
-    partition with the correct (possibly halo) source slot."""
+    partition with the correct (possibly halo) source slot — in both the
+    dense pairwise and the compact ring-bucket plan layout."""
     g = _random_graph(n, e, seed)
-    pg = partition.partition_graph(g, p, method=method, seed=seed)
+    pg = partition.partition_graph(g, p, method=method, seed=seed,
+                                   layout=layout)
     plan = pg.plan
 
     ids = pg.global_ids[pg.node_mask]
@@ -38,10 +41,18 @@ def test_partition_invariants(n, e, p, seed, method):
     assert pg.edge_mask.sum() == e                           # all edges kept
 
     # halo slots: send_idx refers to real local nodes of the sender
+    flat_send_mask = plan.send_mask.reshape(p, -1)
+    flat_send_idx = plan.send_idx.reshape(p, -1)
     for q in range(p):
-        sel = plan.send_mask.reshape(p, p, -1)[q]
-        idxs = plan.send_idx.reshape(p, p, -1)[q][sel]
+        idxs = flat_send_idx[q][flat_send_mask[q]]
         assert (idxs < pg.node_mask[q].sum()).all()
+
+    if layout == "compact":
+        assert plan.bucket_sizes[0] == 0        # diagonal never on the wire
+        assert plan.halo_rows == plan.bucket_sizes.sum()
+        assert plan.real_rows() == plan.send_mask.sum()
+        bstart = np.zeros(p + 1, dtype=np.int64)
+        np.cumsum(plan.bucket_sizes, out=bstart[1:])
 
     # reconstruct each edge's endpoints via the extended table and compare
     # with the original edge set (as multisets)
@@ -55,10 +66,16 @@ def test_partition_invariants(n, e, p, seed, method):
             dst_gid = pg.global_ids[pi, d_loc]
             if s_ext < n_local:
                 src_gid = pg.global_ids[pi, s_ext]
-            else:
+            elif layout == "dense":
                 slot = s_ext - n_local
                 q, s = slot // h_pad, slot % h_pad
                 src_gid = pg.global_ids[q, plan.send_idx.reshape(p, p, -1)[q, pi, s]]
+            else:
+                pos = s_ext - n_local
+                kk = int(np.searchsorted(bstart, pos, side="right")) - 1
+                q = (pi - kk) % p                # ring: bucket kk came from pi-kk
+                assert flat_send_mask[q, pos]
+                src_gid = pg.global_ids[q, flat_send_idx[q, pos]]
             recon.append((int(src_gid), int(dst_gid)))
     orig = sorted(map(tuple, g.edge_index.T.tolist()))
     assert sorted(recon) == orig

@@ -108,6 +108,45 @@ def test_spmm_gcn_aggregation_equivalence():
 
 
 # ---------------------------------------------------------------------------
+# core/quantization dispatch seam: impl="pallas" == impl="jnp" bit-exactly
+# (same PRNG key -> same uniform noise -> same packed payload)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("bits", [1, 2, 4, 8])
+@pytest.mark.parametrize("shape", [(37, 24), (4, 50, 64), (2, 96, 288)])
+def test_quant_dispatch_pallas_matches_jnp(bits, shape):
+    h = jax.random.normal(jax.random.fold_in(KEY, bits + sum(shape)), shape)
+    key = jax.random.fold_in(KEY, 9)
+    qp = qcore.quantize(h, bits, key, stochastic=True, impl="pallas")
+    qj = qcore.quantize(h, bits, key, stochastic=True, impl="jnp")
+    np.testing.assert_array_equal(np.asarray(qp.data), np.asarray(qj.data))
+    np.testing.assert_array_equal(np.asarray(qp.scale), np.asarray(qj.scale))
+    np.testing.assert_array_equal(np.asarray(qp.zero), np.asarray(qj.zero))
+    dp = qcore.dequantize(qp, impl="pallas")
+    dj = qcore.dequantize(qj, impl="jnp")
+    assert dp.shape == h.shape
+    np.testing.assert_allclose(np.asarray(dp), np.asarray(dj), rtol=1e-6,
+                               atol=1e-6)
+
+
+def test_quant_dispatch_resolution_and_fallback():
+    assert qcore.resolve_impl("jnp") == "jnp"
+    assert qcore.resolve_impl("pallas") == "pallas"
+    # auto: Pallas only on TPU
+    expect = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    assert qcore.resolve_impl(None) == expect == qcore.resolve_impl("auto")
+    with pytest.raises(ValueError):
+        qcore.resolve_impl("cuda")
+    # cases the kernel doesn't cover fall back to jnp silently:
+    h = jax.random.normal(KEY, (16, 12))
+    for bits, kw in [(3, dict(key=KEY)),                  # unpackable width
+                     (1, dict(stochastic=False)),         # deterministic
+                     (32, dict(key=KEY))]:                # passthrough
+        qt = qcore.quantize(h, bits, impl="pallas", **kw)
+        ref = qcore.quantize(h, bits, impl="jnp", **kw)
+        np.testing.assert_array_equal(np.asarray(qt.data), np.asarray(ref.data))
+
+
+# ---------------------------------------------------------------------------
 # flash attention (kernels/flash) — the §Perf-identified LM memory lever
 # ---------------------------------------------------------------------------
 from repro.kernels.flash.ops import flash_attention, flash_ref  # noqa: E402

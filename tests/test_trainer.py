@@ -115,9 +115,8 @@ def test_ef21_allreduce_converges_to_true_gradient():
          "b": jax.random.normal(jax.random.fold_in(KEY, 1), (16,))}
     state = compression.EFState.zeros_like(g)
     est = None
-    for i in range(60):
-        est, state = compression.ef_allreduce(
-            g, state, jax.random.fold_in(KEY, i), bits=1)
+    for _ in range(60):
+        est, state = compression.ef_allreduce(g, state, bits=1)
     for k in g:
         err = np.abs(np.asarray(est[k]) - np.asarray(g[k])).mean()
         scale = np.abs(np.asarray(g[k])).mean()

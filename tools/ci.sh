@@ -1,7 +1,30 @@
 #!/usr/bin/env bash
 # Tier-1 verify: the exact command the roadmap pins. Extra args pass through
 # (e.g. `tools/ci.sh -m "not slow"` for the fast lane).
+#
+# Extra lanes (used by .github/workflows/ci.yml):
+#   tools/ci.sh --halo         halo-exchange parity tests with 4 forced host
+#                              devices (runs the shard_map compact/dense parity
+#                              checks in-process instead of skipping them)
+#   tools/ci.sh --bench-smoke  fast bench_halo regression check: fails if the
+#                              compact layout's wire-byte reduction regresses
+#                              past 60% (writes the untracked
+#                              BENCH_halo.smoke.json; only full runs of
+#                              `python -m benchmarks.bench_halo` update the
+#                              tracked BENCH_halo.json)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+case "${1:-}" in
+  --halo)
+    shift
+    XLA_FLAGS="--xla_force_host_platform_device_count=4${XLA_FLAGS:+ $XLA_FLAGS}" \
+      exec python -m pytest -x -q tests/test_halo_compact.py \
+      tests/test_kernels.py -m "not slow" "$@"
+    ;;
+  --bench-smoke)
+    shift
+    exec python -m benchmarks.bench_halo --smoke "$@"
+    ;;
+esac
 exec python -m pytest -x -q "$@"
