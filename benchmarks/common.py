@@ -17,6 +17,7 @@ from repro.core.sylvie import SylvieConfig
 from repro.graph import formats, partition, synthetic
 from repro.launch.mesh import ICI_BW
 from repro.models.gnn.models import GAT, GCN, GraphSAGE
+from repro.policy import BoundedStaleness
 from repro.train.trainer import GNNTrainer
 
 ART = Path(__file__).resolve().parents[1] / "artifacts" / "bench"
@@ -56,12 +57,17 @@ def build_dataset(ds: str):
 
 
 def make_trainer(ds: str, model_name: str, parts: int = 8, eps_s=None,
-                 seed: int = 0, **cfg_kw) -> GNNTrainer:
+                 policy=None, seed: int = 0, **cfg_kw) -> GNNTrainer:
     g, ew = build_dataset(ds)
     pg = partition.partition_graph(g, parts, edge_weight=ew)
     model = MODELS[model_name](g.x.shape[1], g.n_classes)
-    return GNNTrainer(model, pg, SylvieConfig(**cfg_kw), eps_s=eps_s,
-                      seed=seed)
+    cfg = SylvieConfig(**cfg_kw)
+    if eps_s is not None:           # benchmark shorthand for the adaptor
+        assert policy is None
+        policy = BoundedStaleness(eps_s=eps_s, bits=cfg.effective_bits,
+                                  stochastic=cfg.stochastic,
+                                  boundary_sample_p=cfg.boundary_sample_p)
+    return GNNTrainer(model, pg, cfg, policy=policy, seed=seed)
 
 
 def timed_epochs(tr: GNNTrainer, epochs: int, warmup: int = 3):

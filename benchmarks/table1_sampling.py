@@ -49,7 +49,7 @@ def _sampled_accuracy(g, fanout, epochs=EPOCHS, seed=0):
                                   .HaloState.zeros(block.plan,
                                                    model.comm_dims(),
                                                    stacked_parts=1),
-                                  state.step)
+                                  state.step, state.ef, state.site_stats)
         state, _ = jax.jit(ts)(state, block, jnp.asarray(pg.x),
                                jnp.asarray(pg.y), jnp.asarray(pg.train_mask),
                                jax.random.fold_in(key, e))

@@ -2,12 +2,15 @@
 
     PYTHONPATH=src python examples/sylvie_async.py
 
-Compares pure Sylvie-A against Sylvie-A with eps_s={2,5} (one synchronous
-cache-refresh epoch every eps_s epochs) and shows checkpoint/restart with the
-staleness caches restored bit-exactly — then an elastic resume at a different
-partition count. Uses the ``repro.api`` facade; swap
-``Runtime.simulated(parts)`` for ``Runtime.from_mesh(mesh)`` to run one
-partition per device.
+The staleness schedule is a ``CommPolicy``: pure Sylvie-A is
+``Uniform(bits=1)`` (one synchronous warmup epoch, pipelined afterwards), and
+the Bounded Staleness Adaptor is ``BoundedStaleness(eps_s)`` (one synchronous
+cache-refresh epoch every eps_s epochs). Compares the two at eps_s={2,5} and
+shows checkpoint/restart with the staleness caches restored bit-exactly —
+then an elastic resume at a different partition count, where the telemetry's
+``needs_sync`` flag forces the policy into one refresh epoch. Uses the
+``repro.api`` facade; swap ``Runtime.simulated(parts)`` for
+``Runtime.from_mesh(mesh)`` to run one partition per device.
 """
 import pathlib
 import sys
@@ -29,31 +32,37 @@ def build(parts: int):
 
 
 def main() -> None:
-    for eps in (None, 5, 2):
+    policies = (("pure Sylvie-A", repro.Uniform(bits=1)),
+                ("eps_s=5", repro.BoundedStaleness(5)),
+                ("eps_s=2", repro.BoundedStaleness(2)))
+    for label, policy in policies:
         model, pg = build(4)
-        tr = repro.train(model, pg, mode="async", bits=1, eps_s=eps,
-                         epochs=30)
+        tr = repro.train(model, pg, mode="async", policy=policy, epochs=30)
         sync_epochs = sum(1 for m in tr.history if m.mode == "sync")
-        print(f"Sylvie-A eps_s={eps!s:4s}: val acc {tr.evaluate('val'):.4f} "
+        print(f"Sylvie-A {label:13s}: val acc {tr.evaluate('val'):.4f} "
               f"({sync_epochs}/30 synchronous refresh epochs)")
 
     with tempfile.TemporaryDirectory() as d:
         model, pg = build(4)
-        tr = repro.train(model, pg, mode="async", bits=1, eps_s=5,
-                         ckpt_dir=d, epochs=10)
+        tr = repro.train(model, pg, mode="async",
+                         policy=repro.BoundedStaleness(5), ckpt_dir=d,
+                         epochs=10)
         tr.save()
         ref = [tr.train_epoch().loss for _ in range(3)]
 
-        tr2 = repro.train(model, pg, mode="async", bits=1, eps_s=5, ckpt_dir=d)
+        tr2 = repro.train(model, pg, mode="async",
+                          policy=repro.BoundedStaleness(5), ckpt_dir=d)
         tr2.resume()
         res = [tr2.train_epoch().loss for _ in range(3)]
         print(f"restart: losses match bit-exactly: "
               f"{all(abs(a-b) < 1e-6 for a, b in zip(ref, res))}")
 
-        # elastic: same checkpoint, different partition count
+        # elastic: same checkpoint, different partition count. The resume
+        # sets Telemetry.needs_sync, so the policy's first decision is a
+        # forced synchronous cache-refresh epoch.
         model8, pg8 = build(8)
-        tr8 = repro.train(model8, pg8, mode="async", bits=1, eps_s=5,
-                          ckpt_dir=d)
+        tr8 = repro.train(model8, pg8, mode="async",
+                          policy=repro.BoundedStaleness(5), ckpt_dir=d)
         tr8.resume()
         m = tr8.train_epoch()
         print(f"elastic 4->8 parts: resumed at epoch {tr8.epoch-1}, first "

@@ -26,6 +26,9 @@ from .dist import (HaloBackend, Runtime, ShardMapBackend,  # noqa: F401
 from .dist.api import make_gnn_mesh  # noqa: F401
 from .graph import formats
 from .graph import partition as partlib
+from .policy import (AdaQPVariance, BoundedStaleness, Chain,  # noqa: F401
+                     CommPolicy, EpochDecision, SiteDecision, SiteStats,
+                     Telemetry, Uniform, Warmup)
 from .train.trainer import GNNTrainer
 
 
@@ -65,20 +68,28 @@ def partition(g: formats.Graph, n_parts: Optional[int] = None, *,
 
 def train(model, pg: partlib.PartitionedGraph,
           cfg: Optional[SylvieConfig] = None, *,
+          policy: Optional[CommPolicy] = None,
           runtime: Optional[Runtime] = None, epochs: int = 0,
           eps_s: Optional[int] = None, opt=None, seed: int = 0,
           ckpt_dir: Optional[str] = None, **cfg_kw) -> GNNTrainer:
     """Build a :class:`GNNTrainer` (and optionally run ``epochs`` of training).
 
     Either pass a full :class:`SylvieConfig` as ``cfg`` or its fields as
-    keywords (``mode="async"``, ``bits=1``, ...). ``runtime`` defaults to the
-    simulated stack at the graph's partition count.
+    keywords (``mode="async"``, ``bits=1``, ...). ``policy`` is a
+    :class:`~repro.policy.base.CommPolicy` deciding the per-site, per-epoch
+    communication schedule (default: the ``Uniform`` degenerate case built
+    from the config — bit-identical to the static ``bits=`` path).
+    ``runtime`` defaults to the simulated stack at the graph's partition
+    count.
+
+    .. deprecated:: ``eps_s=k`` — pass ``policy=BoundedStaleness(k)``
+       instead; the kwarg builds exactly that policy and warns.
     """
     if cfg is None:
         cfg = SylvieConfig(**cfg_kw)
     elif cfg_kw:
         raise TypeError(f"pass cfg or config keywords, not both: {cfg_kw}")
-    trainer = GNNTrainer(model, pg, cfg, opt=opt, eps_s=eps_s,
+    trainer = GNNTrainer(model, pg, cfg, opt=opt, policy=policy, eps_s=eps_s,
                          runtime=runtime, seed=seed, ckpt_dir=ckpt_dir)
     if epochs:
         trainer.fit(epochs)

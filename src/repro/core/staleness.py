@@ -53,7 +53,11 @@ class HaloState:
 def use_sync_step(epoch: int, eps_s: int | None) -> bool:
     """Bounded Staleness Adaptor schedule (paper §3.3): one synchronous epoch every
     ``eps_s`` epochs (``None`` = pure Sylvie-A; 1 = always synchronous). Epoch 0 is
-    always synchronous — it doubles as the cache warmup."""
+    always synchronous — it doubles as the cache warmup.
+
+    The trainer no longer calls this directly: the schedule is owned by the
+    ``repro.policy.builtin.BoundedStaleness`` policy (which delegates here —
+    this function remains the single definition of the paper's pattern)."""
     if epoch == 0:
         return True
     if eps_s is None:

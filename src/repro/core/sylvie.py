@@ -14,6 +14,16 @@ Three communication modes (paper §3):
   surfaces as the gradient of a zero-valued ``gslot`` input, becoming the
   next step's ``grad_in`` (one-step-stale boundary gradients).
 
+What each exchange site does in a given epoch — forward/backward bit-widths,
+stochastic vs deterministic rounding, BNS boundary sampling — is a
+:class:`repro.policy.base.SiteDecision`: ``SylvieComm`` consumes
+``decision.sites[i]`` at the i-th ``halo`` call, so a
+:class:`~repro.policy.base.CommPolicy` can vary precision per site and per
+epoch without touching this module. Every decision field is static (it rides
+the ``custom_vjp`` nondiff argnums), so jit compiles one executable per
+distinct decision. Constructing ``SylvieComm`` without a decision falls back
+to the one global ``SylvieConfig`` choice (the Uniform degenerate case).
+
 Buffer layout and quantizer implementation are both plan/config decisions made
 here once for every site:
 
@@ -26,9 +36,9 @@ here once for every site:
   the compacted buffer are quantized, so Low-bit-Module FLOPs track the actual
   boundary set, not the padded worst case (paper §4.4 overhead budget).
 
-The *Bounded Staleness Adaptor* (paper §3.3) lives in ``core/staleness.py`` /
-``train/trainer.py``: every ``eps_s`` epochs one synchronous step refreshes all
-caches.
+The *Bounded Staleness Adaptor* (paper §3.3) is the
+``repro.policy.builtin.BoundedStaleness`` policy; the trainer runs the policy
+loop (``train/trainer.py``).
 """
 from __future__ import annotations
 
@@ -39,6 +49,7 @@ import jax
 import jax.numpy as jnp
 
 from ..dist.backend import as_backend
+from ..policy.base import SiteDecision
 from . import quantization as qlib
 from .exchange import (PlanArrays, exchange_halo, exchange_quantized_halo,
                        gather_boundary, scatter_boundary_grad)
@@ -80,27 +91,33 @@ def _q_roundtrip(buf, key, bits, stochastic, scale_dtype, backend, plan,
 # ---------------------------------------------------------------------------
 # Sylvie-S: synchronous quantized exchange with quantized backward communication
 # ---------------------------------------------------------------------------
-@partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8))
+@partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8, 9))
 def quantized_halo(h, plan: PlanArrays, fwd_key, bwd_key,
-                   bits: int, stochastic: bool, scale_dtype, backend, impl):
-    """(P, n_local, d) -> (P, halo_rows, d) dequantized halo features."""
+                   fwd_bits: int, bwd_bits: int, stochastic: bool,
+                   scale_dtype, backend, impl):
+    """(P, n_local, d) -> (P, halo_rows, d) dequantized halo features.
+
+    ``fwd_bits`` quantizes the forward feature exchange, ``bwd_bits`` the
+    backward gradient communication — per-site, per-direction decisions."""
     buf = gather_boundary(h, plan)
-    out = _q_roundtrip(buf, fwd_key, bits, stochastic, scale_dtype, backend,
-                       plan, impl=impl)
+    out = _q_roundtrip(buf, fwd_key, fwd_bits, stochastic, scale_dtype,
+                       backend, plan, impl=impl)
     return jnp.where(plan.recv_mask[..., None], out, 0)
 
 
-def _qh_fwd(h, plan, fwd_key, bwd_key, bits, stochastic, scale_dtype, backend,
-            impl):
+def _qh_fwd(h, plan, fwd_key, bwd_key, fwd_bits, bwd_bits, stochastic,
+            scale_dtype, backend, impl):
     out = quantized_halo(h, plan, fwd_key, bwd_key,
-                         bits, stochastic, scale_dtype, backend, impl)
+                         fwd_bits, bwd_bits, stochastic, scale_dtype, backend,
+                         impl)
     return out, (plan, bwd_key)
 
 
-def _qh_bwd(bits, stochastic, scale_dtype, backend, impl, res, g):
+def _qh_bwd(fwd_bits, bwd_bits, stochastic, scale_dtype, backend, impl, res,
+            g):
     plan, bwd_key = res
     g = jnp.where(plan.recv_mask[..., None], g, 0)
-    back = _q_roundtrip(g, bwd_key, bits, stochastic, scale_dtype, backend,
+    back = _q_roundtrip(g, bwd_key, bwd_bits, stochastic, scale_dtype, backend,
                         plan, reverse=True, impl=impl)
     grad_h = scatter_boundary_grad(back, plan)
     return (grad_h, None, None, None)
@@ -112,41 +129,41 @@ quantized_halo.defvjp(_qh_fwd, _qh_bwd)
 # ---------------------------------------------------------------------------
 # Sylvie-A: stale halo consumption + fresh exchange emission
 # ---------------------------------------------------------------------------
-def fresh_halo(h, plan: PlanArrays, key, bits, stochastic, scale_dtype, backend,
-               impl="auto"):
+def fresh_halo(h, plan: PlanArrays, key, fwd_bits, stochastic, scale_dtype,
+               backend, impl="auto"):
     """The concurrent forward exchange: quantize this step's boundary features and
     deliver them as *next* step's cache. Detached — no gradient flows (staleness
     is handled by the grad_in path)."""
     buf = gather_boundary(jax.lax.stop_gradient(h), plan)
-    out = _q_roundtrip(buf, key, bits, stochastic, scale_dtype, backend,
+    out = _q_roundtrip(buf, key, fwd_bits, stochastic, scale_dtype, backend,
                        plan, impl=impl)
     return jnp.where(plan.recv_mask[..., None], out, 0)
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8, 9, 10))
 def stale_halo(h, feat_cache, grad_in, gslot, plan: PlanArrays, bwd_key,
-               bits: int, stochastic: bool, scale_dtype, backend, impl):
+               bwd_bits: int, stochastic: bool, scale_dtype, backend, impl):
     """Consume the stale halo; wire the staleness dataflow into autodiff.
 
     * primal output  = ``feat_cache`` (previous step's dequantized halo features)
     * grad wrt ``h``     = ``grad_in`` scattered onto boundary nodes (previous
       step's incoming boundary gradients — Alg. 2 line 13, one step stale)
-    * grad wrt ``gslot`` = this step's outgoing quantized gradient exchange
-      (surfaces to the caller as the next step's ``grad_in``)
+    * grad wrt ``gslot`` = this step's outgoing quantized gradient exchange at
+      ``bwd_bits`` (surfaces to the caller as the next step's ``grad_in``)
     """
     del h, grad_in, gslot, plan, bwd_key
     return feat_cache
 
 
 def _sh_fwd(h, feat_cache, grad_in, gslot, plan, bwd_key,
-            bits, stochastic, scale_dtype, backend, impl):
+            bwd_bits, stochastic, scale_dtype, backend, impl):
     return feat_cache, (plan, grad_in, bwd_key)
 
 
-def _sh_bwd(bits, stochastic, scale_dtype, backend, impl, res, g):
+def _sh_bwd(bwd_bits, stochastic, scale_dtype, backend, impl, res, g):
     plan, grad_in, bwd_key = res
     g = jnp.where(plan.recv_mask[..., None], g, 0)
-    fresh_grad = _q_roundtrip(g, bwd_key, bits, stochastic, scale_dtype,
+    fresh_grad = _q_roundtrip(g, bwd_key, bwd_bits, stochastic, scale_dtype,
                               backend, plan, reverse=True, impl=impl)
     fresh_grad = jnp.where(plan.send_mask[..., None], fresh_grad, 0)
     grad_h = scatter_boundary_grad(grad_in, plan)
@@ -163,18 +180,27 @@ class SylvieComm:
     """Created inside each traced step; models call ``comm.halo(h)`` once per
     layer-exchange site. All communication goes through ``backend`` (a
     :class:`repro.dist.backend.HaloBackend`; the simulated stack by default).
-    Collects fresh caches (async mode) as it goes."""
+
+    ``decision`` is an :class:`~repro.policy.base.EpochDecision` whose
+    ``sites[i]`` drives the i-th ``halo`` call; ``None`` falls back to the one
+    global ``SylvieConfig`` choice for every site (the Uniform shim).
+    Collects fresh caches (async mode) and — when ``collect_stats`` — per-site
+    boundary range statistics as it goes."""
 
     def __init__(self, cfg: SylvieConfig, plan: PlanArrays, key,
-                 backend=None, feat_caches=None, grad_ins=None, gslots=None):
+                 backend=None, decision=None, collect_stats=False,
+                 feat_caches=None, grad_ins=None, gslots=None):
         self.cfg = cfg
         self.plan = plan
         self.key = key
         self.backend = as_backend(backend)
+        self.decision = decision
+        self.collect_stats = collect_stats
         self.feat_caches = feat_caches
         self.grad_ins = grad_ins
         self.gslots = gslots
         self.new_feat_caches: list = []
+        self.site_stats: list = []
         self._site = 0
 
     def _part_key(self):
@@ -186,27 +212,47 @@ class SylvieComm:
             return self.key
         return jax.random.fold_in(self.key, idx)
 
-    def _bns_mask(self, key):
+    def _bns_mask(self, key, p):
         """BNS-GCN-style boundary sampling: one Bernoulli keep-mask per halo
         row per epoch, shared by forward and backward (paper baseline)."""
-        p = self.cfg.boundary_sample_p
         if p <= 0.0:
             return None
         rows = self.plan.recv_mask.shape
         return (jax.random.bernoulli(key, 1.0 - p, rows) / (1.0 - p))
 
+    def _record_stats(self, h):
+        """Per-site telemetry for adaptive policies: sum over live send rows
+        of the squared per-row range, plus the live-row count (this
+        partition's slice; the step psums across partitions)."""
+        if not self.collect_stats:
+            return
+        buf = gather_boundary(jax.lax.stop_gradient(h), self.plan)
+        rng = jnp.max(buf, axis=-1) - jnp.min(buf, axis=-1)
+        live = self.plan.send_mask.astype(jnp.float32)
+        self.site_stats.append(
+            jnp.stack([(rng.astype(jnp.float32) ** 2 * live).sum(),
+                       live.sum()]))
+
+    def _site_decision(self, i) -> SiteDecision:
+        if self.decision is not None:
+            return self.decision.sites[i]
+        return SiteDecision.from_config(self.cfg)
+
     def halo(self, h: jax.Array) -> jax.Array:
         cfg = self.cfg
         i = self._site
         self._site += 1
+        sd = self._site_decision(i)
         key = self._part_key()
         kf = jax.random.fold_in(key, 2 * i)
         kb = jax.random.fold_in(key, 2 * i + 1)
-        bits = cfg.effective_bits
+        self._record_stats(h)
         if cfg.mode in ("vanilla", "sync"):
-            halo = quantized_halo(h, self.plan, kf, kb, bits, cfg.stochastic,
-                                  cfg.scale_dtype, self.backend, cfg.quant_impl)
-            bns = self._bns_mask(jax.random.fold_in(key, 999))
+            halo = quantized_halo(h, self.plan, kf, kb, sd.fwd_bits,
+                                  sd.bwd_bits, sd.stochastic, cfg.scale_dtype,
+                                  self.backend, cfg.quant_impl)
+            bns = self._bns_mask(jax.random.fold_in(key, 999),
+                                 sd.boundary_sample_p)
             if bns is not None:
                 halo = halo * bns[..., None]
             # a synchronous step doubles as a cache refresh for Sylvie-A
@@ -215,10 +261,10 @@ class SylvieComm:
             return halo
         # async: consume stale, emit fresh
         halo = stale_halo(h, self.feat_caches[i], self.grad_ins[i], self.gslots[i],
-                          self.plan, kb, bits, cfg.stochastic, cfg.scale_dtype,
-                          self.backend, cfg.quant_impl)
+                          self.plan, kb, sd.bwd_bits, sd.stochastic,
+                          cfg.scale_dtype, self.backend, cfg.quant_impl)
         self.new_feat_caches.append(
-            fresh_halo(h, self.plan, kf, bits, cfg.stochastic,
+            fresh_halo(h, self.plan, kf, sd.fwd_bits, sd.stochastic,
                        cfg.scale_dtype, self.backend, cfg.quant_impl))
         return halo
 

@@ -67,8 +67,12 @@ def make_gnn_mesh(n_parts: int | None = None, axis_name: str = "parts"):
 
 def gnn_state_specs(state, axes) -> Any:
     """Spec prefix for a GNNTrainState: params/opt/step replicated, halo
-    caches sharded on the leading partition axis."""
-    return type(state)(params=P(), opt_state=P(), halo=P(axes), step=P())
+    caches sharded on the leading partition axis. The EF21 compressor state
+    and the psum'd per-site comm telemetry are replicated (the compressor is
+    deterministic on the already-reduced gradient; the stats are reduced
+    inside the step)."""
+    return type(state)(params=P(), opt_state=P(), halo=P(axes), step=P(),
+                       ef=P(), site_stats=P())
 
 
 def gnn_block_spec(axes) -> P:
@@ -123,7 +127,9 @@ def device_put_gnn(mesh, state, block, arrays=()):
         params=backend.device_put(state.params, rep),
         opt_state=backend.device_put(state.opt_state, rep),
         halo=backend.device_put(state.halo, sharded),
-        step=backend.device_put(state.step, rep))
+        step=backend.device_put(state.step, rep),
+        ef=backend.device_put(state.ef, rep),
+        site_stats=backend.device_put(state.site_stats, rep))
     block_d = backend.device_put(block, sharded)
     arrays_d = tuple(backend.device_put(a, sharded) for a in arrays)
     return state_d, block_d, arrays_d

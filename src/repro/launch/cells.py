@@ -257,8 +257,13 @@ def _gnn_cell(spec: ArchSpec, cell: ShapeCell, mesh, *,
     opt_shape = jax.eval_shape(opt.init, params_shape)
     halo = HaloState.zeros_spec(block.plan, model.comm_dims(),
                                 stacked_parts=p_n)
+    from ..train.compression import EFState
+    ef_shape = jax.eval_shape(EFState.zeros_like, params_shape)
     state = GNNTrainState(params=_sds(params_shape), opt_state=_sds(opt_shape),
-                          halo=halo, step=jax.ShapeDtypeStruct((), jnp.int32))
+                          halo=halo, step=jax.ShapeDtypeStruct((), jnp.int32),
+                          ef=_sds(ef_shape),
+                          site_stats=jax.ShapeDtypeStruct(
+                              (len(model.comm_dims()), 2), jnp.float32))
     x = jax.ShapeDtypeStruct((p_n, pspec.n_local, d_feat), jnp.float32)
     y = jax.ShapeDtypeStruct((p_n, pspec.n_local), jnp.int32)
     m = jax.ShapeDtypeStruct((p_n, pspec.n_local), jnp.bool_)

@@ -20,6 +20,27 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def build_policy(args):
+    """CLI -> CommPolicy. ``--eps-s`` maps onto the BoundedStaleness policy
+    (the old trainer kwarg survives only as a deprecation shim)."""
+    from .. import policy as P
+
+    if args.eps_s is not None and args.policy not in ("uniform",
+                                                      "bounded_staleness"):
+        raise SystemExit(f"--eps-s conflicts with --policy {args.policy}; "
+                         "it implies bounded_staleness")
+    if args.policy == "warmup":
+        return P.Warmup(epochs=args.warmup_epochs, bits=args.bits)
+    if args.policy == "adaqp":
+        return P.AdaQPVariance(budget_bits=args.bits)
+    if args.policy == "bounded_staleness" or args.eps_s is not None:
+        if args.eps_s is None:
+            raise SystemExit("--policy bounded_staleness needs --eps-s N "
+                             "(the cache-refresh period)")
+        return P.BoundedStaleness(eps_s=args.eps_s, bits=args.bits)
+    return None  # Uniform from the SylvieConfig
+
+
 def train_gnn(args) -> None:
     from .. import configs as configlib
     from ..core.sylvie import SylvieConfig
@@ -43,7 +64,7 @@ def train_gnn(args) -> None:
     pg = partition.partition_graph(g, args.parts, edge_weight=ew)
     model = arch.make(g.x.shape[1], g.n_classes)
     cfg = SylvieConfig(mode=args.mode, bits=args.bits)
-    tr = GNNTrainer(model, pg, cfg, eps_s=args.eps_s, seed=args.seed,
+    tr = GNNTrainer(model, pg, cfg, policy=build_policy(args), seed=args.seed,
                     ckpt_dir=args.ckpt_dir)
     if args.resume and tr.resume():
         print(f"resumed at epoch {tr.epoch}")
@@ -152,7 +173,14 @@ def main() -> None:
     ap.add_argument("--mode", default="sync",
                     choices=["vanilla", "sync", "async"])
     ap.add_argument("--bits", type=int, default=1)
-    ap.add_argument("--eps-s", type=int, default=None)
+    ap.add_argument("--policy", default="uniform",
+                    choices=["uniform", "warmup", "bounded_staleness",
+                             "adaqp"],
+                    help="per-epoch communication schedule (repro.policy); "
+                         "adaqp treats --bits as the budget")
+    ap.add_argument("--warmup-epochs", type=int, default=5)
+    ap.add_argument("--eps-s", type=int, default=None,
+                    help="cache-refresh period (implies bounded_staleness)")
     ap.add_argument("--epochs", type=int, default=50)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--resume", action="store_true")

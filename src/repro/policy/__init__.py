@@ -1,0 +1,19 @@
+"""repro.policy — per-site, per-epoch communication schedules.
+
+A :class:`CommPolicy` maps host-side telemetry (epoch, per-site quantization
+stats, validation trajectory) to an :class:`EpochDecision` — a hashable,
+trace-static schedule of per-site bit-widths plus the sync/async choice — once
+per epoch, outside the trace. See ``policy/base.py`` for the contract and
+DESIGN.md §"Communication policies" for the architecture.
+"""
+from .base import (BIT_LATTICE, CommPolicy, EpochDecision, SiteDecision,
+                   SiteStats, Telemetry, snap_bits, snap_sample_p,
+                   validate_decision)
+from .builtin import (AdaQPVariance, BoundedStaleness, Chain, Uniform,
+                      Warmup)
+
+__all__ = [
+    "BIT_LATTICE", "CommPolicy", "EpochDecision", "SiteDecision", "SiteStats",
+    "Telemetry", "snap_bits", "snap_sample_p", "validate_decision",
+    "AdaQPVariance", "BoundedStaleness", "Chain", "Uniform", "Warmup",
+]

@@ -15,8 +15,13 @@ EF21-style compressed all-reduce that composes with Sylvie's Low-bit Module
 mean gradient while the wire carries b-bit payloads (Richtárik et al.,
 EF21 [arXiv:2106.05203]; 1-bit Adam [arXiv:2102.02888]).
 
-Off by default; enabled with ``GNNTrainer(grad_compress_bits=...)`` and
-evaluated in EXPERIMENTS.md §Perf.
+Off by default. The bit-width is part of the per-epoch communication
+decision: any :class:`repro.policy.base.CommPolicy` whose ``EpochDecision``
+sets ``ef_bits`` (e.g. ``Uniform(bits=1, ef_bits=2)``) routes the reduced
+weight gradient through :func:`ef_allreduce` inside the step
+(``train/gnn_step.py``); the EF error/estimate state lives in
+``GNNTrainState.ef`` and :func:`ef_wire_bytes` joins the trainer's per-epoch
+byte accounting.
 """
 from __future__ import annotations
 

@@ -1,5 +1,5 @@
-"""GNN trainer: epoch loop, Bounded Staleness Adaptor scheduling, eval,
-checkpoint/restart, optional EF21 gradient compression, metrics.
+"""GNN trainer: epoch loop, the CommPolicy loop, eval, checkpoint/restart,
+EF21 gradient compression, metrics.
 
 One :class:`GNNTrainer` drives either execution mode through a
 :class:`repro.dist.runtime.Runtime`:
@@ -8,16 +8,29 @@ One :class:`GNNTrainer` drives either execution mode through a
   * ``Runtime.from_mesh(mesh)`` — shard_map, one partition per device (the
     production path).
 
-The *Bounded Staleness Adaptor* (paper §3.3) lives here: with
-``cfg.mode == "async"`` and ``eps_s = k``, every k-th epoch runs the
-synchronous step, refreshing all halo caches and draining in-flight boundary
-gradients; epoch 0 is always synchronous (cache warm-up). ``eps_s=None``
-means pure Sylvie-A.
+The **policy loop** lives here. Once per epoch, *outside the trace*:
+
+  1. telemetry is assembled from host-side observations (epoch index, the
+     EMA-smoothed per-site range stats the previous step emitted, the val
+     trajectory, the resume/elastic ``needs_sync`` flag);
+  2. ``policy.decide(telemetry)`` maps it to an
+     :class:`~repro.policy.base.EpochDecision` — per-site fwd/bwd bit-widths,
+     rounding, boundary sampling, EF bits, and the sync/async choice;
+  3. the decision is snapped to the lattice (``decision.snapped()``) and used
+     as the key of a compiled-step cache, so jit compiles one executable per
+     *distinct* decision — a drifting policy cannot trigger unbounded
+     recompilation.
+
+``SylvieConfig(bits=...)`` (no policy) degenerates to the ``Uniform`` policy
+and is bit-identical to the historical static path. The paper's Bounded
+Staleness Adaptor (§3.3) is ``policy=BoundedStaleness(eps_s)``; the old
+``eps_s=`` kwarg survives as a deprecation shim that builds exactly that.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Optional
 
 import jax
@@ -25,13 +38,21 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.exchange import exchange_bytes, wire_bytes
-from ..core.staleness import use_sync_step
 from ..core.sylvie import SylvieConfig
 from ..dist.runtime import Runtime
 from ..models.gnn import blocks as B
+from ..policy.base import (CommPolicy, EpochDecision, SiteStats, Telemetry,
+                           validate_decision)
+from ..policy.builtin import BoundedStaleness, Uniform
 from . import checkpoint as ckpt
 from . import optimizer as optlib
+from .compression import ef_wire_bytes
 from .gnn_step import GNNTrainState, make_gnn_steps
+
+# EMA smoothing factor for the per-site range stats fed back to policies —
+# damps epoch-to-epoch jitter so adaptive bit assignments settle on one
+# lattice point instead of oscillating (recompile budget).
+STATS_EMA = 0.5
 
 
 @dataclasses.dataclass
@@ -43,18 +64,36 @@ class EpochMetrics:
     comm_payload_mb: float
     comm_ec_mb: float
     val_acc: Optional[float] = None
+    # per-site (fwd_bits, bwd_bits) actually used this epoch + the policy
+    # that chose them (heterogeneous-bits accounting).
+    bits_per_site: tuple = ()
+    policy: str = ""
+    ef_bits: Optional[int] = None
 
 
 class GNNTrainer:
-    def __init__(self, model, pg, cfg: SylvieConfig,
+    def __init__(self, model, pg, cfg: Optional[SylvieConfig] = None,
                  opt: Optional[optlib.Optimizer] = None,
+                 policy: Optional[CommPolicy] = None,
                  eps_s: Optional[int] = None,
                  runtime: Optional[Runtime] = None, mesh=None, seed: int = 0,
                  ckpt_dir: Optional[str] = None, keep: int = 3):
         self.model = model
         self.pg = pg
-        self.cfg = cfg
-        self.eps_s = eps_s
+        self.cfg = cfg = cfg if cfg is not None else SylvieConfig()
+        if eps_s is not None:
+            warnings.warn(
+                "GNNTrainer(eps_s=...) is deprecated; pass "
+                "policy=repro.policy.BoundedStaleness(eps_s) instead",
+                DeprecationWarning, stacklevel=2)
+            if policy is not None:
+                raise ValueError("pass policy or eps_s, not both")
+            policy = BoundedStaleness(
+                eps_s=eps_s, bits=cfg.effective_bits,
+                stochastic=cfg.stochastic,
+                boundary_sample_p=cfg.boundary_sample_p)
+        self.policy: CommPolicy = policy if policy is not None \
+            else Uniform.from_config(cfg)
         p = pg.plan.n_parts
         if runtime is not None and mesh is not None:
             raise ValueError("pass runtime or mesh, not both "
@@ -79,12 +118,17 @@ class GNNTrainer:
         self.train_mask = jnp.asarray(pg.train_mask)
         self.val_mask = jnp.asarray(pg.val_mask)
         self.test_mask = jnp.asarray(pg.test_mask)
+        self.site_dims = tuple(int(d) for d in model.comm_dims())
+        self.n_sites = len(self.site_dims)
         self.state = GNNTrainState.create(self.model, self.opt, self.key,
                                           self.block.plan, stacked_parts=p)
-        ts, ta, ev = make_gnn_steps(self.model, cfg, self.opt,
-                                    backend=runtime.backend)
-        self._ts, self._ta, self._ev = runtime.shard_gnn_steps(
-            ts, ta, ev, self.state, self.block)
+        # compiled train steps per distinct (snapped) decision; eval is
+        # decision-independent (always full precision) and built once.
+        self._step_cache: dict = {}
+        ts0, ta0, ev = make_gnn_steps(self.model, cfg, self.opt,
+                                      backend=runtime.backend)
+        _, _, self._ev = runtime.shard_gnn_steps(ts0, ta0, ev, self.state,
+                                                 self.block)
         self.state, self.block, arrs = runtime.device_put_gnn(
             self.state, self.block,
             (self.x, self.y, self.train_mask, self.val_mask, self.test_mask))
@@ -93,46 +137,122 @@ class GNNTrainer:
         self.epoch = 0
         self.history: list[EpochMetrics] = []
         self._needs_sync = False
+        self._site_stats: Optional[tuple[SiteStats, ...]] = None
+        self._last_decision: Optional[EpochDecision] = None
 
     # ------------------------------------------------------------------
-    def _bytes_per_epoch(self, bytes_fn) -> tuple[float, float]:
-        """x2 for forward + backward exchanges, summed over comm sites."""
-        bits = self.cfg.effective_bits
+    # the policy loop
+    # ------------------------------------------------------------------
+    def _telemetry(self) -> Telemetry:
+        return Telemetry(
+            epoch=self.epoch, n_parts=self.pg.plan.n_parts,
+            n_sites=self.n_sites, site_dims=self.site_dims,
+            site_stats=self._site_stats,
+            val_history=tuple(m.val_acc for m in self.history
+                              if m.val_acc is not None),
+            needs_sync=self._needs_sync, prev=self._last_decision)
+
+    def _decide(self) -> EpochDecision:
+        """Pure: telemetry -> snapped EpochDecision (callable speculatively,
+        e.g. for byte accounting before any epoch ran). Mode invariants are
+        enforced here, not trusted to the policy: vanilla pins 32-bit, only
+        async mode may skip the synchronous step, epoch 0 always runs it (the
+        zero-initialized halo caches must be warmed before any pipelined
+        step), and a pending cache refresh (``needs_sync``) always wins."""
+        d = self.policy.decide(self._telemetry()).snapped()
+        d = validate_decision(d, self.n_sites)
+        if self.cfg.mode == "vanilla":
+            d = d.with_bits(32)
+        sync = (bool(d.sync) or self.cfg.mode != "async" or self._needs_sync
+                or self.epoch == 0)
+        return dataclasses.replace(d, sync=sync)
+
+    def _steps_for(self, decision: EpochDecision):
+        """(train_sync, train_async) compiled for this decision. Cached on
+        ``decision.step_key()`` (sync excluded — it picks *which* step runs),
+        so distinct executables are bounded by distinct lattice points."""
+        key = decision.step_key()
+        if key not in self._step_cache:
+            ts, ta, ev = make_gnn_steps(self.model, self.cfg, self.opt,
+                                        backend=self.runtime.backend,
+                                        decision=decision)
+            ts, ta, _ = self.runtime.shard_gnn_steps(ts, ta, ev, self.state,
+                                                     self.block)
+            self._step_cache[key] = (ts, ta)
+        return self._step_cache[key]
+
+    def _absorb_site_stats(self):
+        """Fold the step's emitted (n_sites, 2) [sum range^2, live rows] into
+        the EMA-smoothed SiteStats telemetry."""
+        raw = np.asarray(jax.device_get(self.state.site_stats))
+        rows = self.block.plan.real_rows
+        cur = []
+        for i, d in enumerate(self.site_dims):
+            mean_sq = float(raw[i, 0]) / max(float(raw[i, 1]), 1.0)
+            if self._site_stats is not None:
+                prev = self._site_stats[i].mean_range_sq
+                mean_sq = STATS_EMA * prev + (1.0 - STATS_EMA) * mean_sq
+            cur.append(SiteStats(dim=d, rows=rows, mean_range_sq=mean_sq))
+        self._site_stats = tuple(cur)
+
+    # ------------------------------------------------------------------
+    # heterogeneous-bits comm accounting
+    # ------------------------------------------------------------------
+    def _bytes_per_epoch(self, bytes_fn,
+                         decision: Optional[EpochDecision] = None):
+        """Sum per-site, per-direction bytes under the epoch's actual
+        decision (forward and backward exchanges may use different widths)."""
+        if decision is None:
+            decision = self._last_decision or self._decide()
         payload = ec = 0
-        for d in self.model.comm_dims():
-            pb, eb = bytes_fn(self.block.plan, d, bits, self.cfg.scale_dtype)
-            payload += 2 * pb
-            ec += 2 * eb
+        for d, sd in zip(self.site_dims, decision.sites):
+            for bits in (sd.fwd_bits, sd.bwd_bits):
+                pb, eb = bytes_fn(self.block.plan, d, bits,
+                                  self.cfg.scale_dtype)
+                payload += pb
+                ec += eb
+        if decision.ef_bits is not None:
+            pb, eb = ef_wire_bytes(self.state.params, decision.ef_bits)
+            payload += pb
+            ec += eb
         return payload, ec
 
-    def comm_bytes_per_epoch(self) -> tuple[float, float]:
+    def comm_bytes_per_epoch(self, decision: Optional[EpochDecision] = None
+                             ) -> tuple[float, float]:
         """(payload, error-compensation) *true wire* bytes moved per epoch,
         totaled across partitions. Diagonal self-blocks and padding rows are
-        excluded (Table 3)."""
-        return self._bytes_per_epoch(exchange_bytes)
+        excluded (Table 3). Defaults to the last epoch's decision (or the
+        policy's next decision before any epoch ran)."""
+        return self._bytes_per_epoch(exchange_bytes, decision)
 
-    def wire_bytes_per_epoch(self) -> tuple[float, float]:
+    def wire_bytes_per_epoch(self, decision: Optional[EpochDecision] = None
+                             ) -> tuple[float, float]:
         """Like :meth:`comm_bytes_per_epoch` but counting the rows the plan's
         layout actually ships (incl. bucket-alignment / pairwise padding) —
         the layout-efficiency number the compact plan optimizes."""
-        return self._bytes_per_epoch(wire_bytes)
+        return self._bytes_per_epoch(wire_bytes, decision)
 
     def _epoch_key(self):
         return jax.random.fold_in(self.key, self.epoch)
 
     def train_epoch(self) -> EpochMetrics:
-        sync = (self.cfg.mode != "async" or self._needs_sync
-                or use_sync_step(self.epoch, self.eps_s))
-        fn = self._ts if sync else self._ta
+        decision = self._decide()
+        ts, ta = self._steps_for(decision)
+        fn = ts if decision.sync else ta
         t0 = time.time()
         self.state, loss = fn(self.state, self.block, self.x, self.y,
                               self.train_mask, self._epoch_key())
         loss = float(loss)
         dt = time.time() - t0
         self._needs_sync = False
-        pb, eb = self.comm_bytes_per_epoch()
-        m = EpochMetrics(self.epoch, loss, dt, "sync" if sync else "async",
-                         pb / 1e6, eb / 1e6)
+        self._last_decision = decision
+        self._absorb_site_stats()
+        pb, eb = self.comm_bytes_per_epoch(decision)
+        m = EpochMetrics(self.epoch, loss, dt,
+                         "sync" if decision.sync else "async",
+                         pb / 1e6, eb / 1e6,
+                         bits_per_site=decision.bits_per_site(),
+                         policy=self.policy.name, ef_bits=decision.ef_bits)
         self.history.append(m)
         self.epoch += 1
         return m
@@ -156,13 +276,14 @@ class GNNTrainer:
     # ------------------------------------------------------------------
     def save(self):
         meta = dict(n_parts=self.pg.plan.n_parts, epoch=self.epoch,
-                    mode=self.cfg.mode, bits=self.cfg.bits)
+                    mode=self.cfg.mode, policy=self.policy.name)
         ckpt.save(self.ckpt_dir, self.epoch, self.state, meta, keep=self.keep)
 
     def resume(self) -> bool:
         """Restore the latest checkpoint if present. Returns True if resumed.
         An elastic repartition (different n_parts) zeroes halo caches and
-        forces one synchronous epoch."""
+        forces one synchronous epoch (``Telemetry.needs_sync`` — every
+        built-in policy honors it, and ``_decide`` enforces it regardless)."""
         step = ckpt.latest_step(self.ckpt_dir) if self.ckpt_dir else None
         if step is None:
             return False

@@ -182,7 +182,7 @@ def test_quantized_backward_scatter_compact():
     x = jnp.asarray(pg.x)
 
     def f(h):
-        halo = quantized_halo(h, plan, KEY, KEY, 32, False, jnp.bfloat16,
+        halo = quantized_halo(h, plan, KEY, KEY, 32, 32, False, jnp.bfloat16,
                               None, "jnp")
         return (halo ** 2).sum() / 2
 

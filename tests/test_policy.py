@@ -1,0 +1,339 @@
+"""CommPolicy: per-site, per-epoch communication schedules.
+
+Covers the acceptance contract of the policy API:
+  * ``Uniform`` is bit-identical to the ``SylvieConfig(bits=...)`` shim path
+    (sync + async, simulated always; shard_map inline when the session has
+    >= 4 devices — the CI ``--policy`` lane — and in a slow subprocess);
+  * ``BoundedStaleness`` reproduces ``use_sync_step``'s exact epoch pattern,
+    including the forced synchronous epoch after an elastic resume;
+  * ``AdaQPVariance`` assigns more bits to higher-variance sites and stays
+    inside the uniform-budget byte envelope;
+  * a 20-epoch adaptive run stays within the <= 3-recompile budget;
+  * heterogeneous per-site bits are accounted per site and per direction.
+"""
+import dataclasses
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.api as repro
+from repro.core.exchange import exchange_bytes
+from repro.core.staleness import use_sync_step
+from repro.graph import formats, partition, synthetic
+from repro.models.gnn.models import GCN
+from repro.policy import (AdaQPVariance, BoundedStaleness, Chain,
+                          EpochDecision, SiteDecision, SiteStats, Telemetry,
+                          Uniform, Warmup, snap_bits, snap_sample_p)
+from repro.train import gnn_step
+from repro.train.trainer import GNNTrainer
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+KEY = jax.random.PRNGKey(0)
+
+
+def _graph(n=240, d=16, seed=0, flat_x=False):
+    g = synthetic.planted_partition(n_nodes=n, d_feat=d, seed=seed)
+    if flat_x:
+        # plant a variance asymmetry between exchange sites: constant feature
+        # rows have per-row range ~0 (losslessly 1-bit quantizable), while the
+        # hidden-layer exchange keeps a normal spread — AdaQP should move the
+        # byte budget to the hidden site.
+        g.x[:] = g.x[:, :1]
+    ei = formats.add_self_loops(g.edge_index, g.n_nodes)
+    ew = formats.gcn_edge_weights(ei, g.n_nodes)
+    return formats.Graph(g.n_nodes, ei, g.x, g.y, g.train_mask, g.val_mask,
+                         g.test_mask, n_classes=g.n_classes), ew
+
+
+def _trainer(mode="sync", policy=None, parts=4, eps_s=None, ckpt_dir=None,
+             flat_x=False, seed=0, **cfg_kw):
+    g, ew = _graph(seed=seed, flat_x=flat_x)
+    pg = partition.partition_graph(g, parts, edge_weight=ew)
+    model = GCN(d_in=16, d_hidden=24, d_out=g.n_classes, n_layers=2)
+    cfg = repro.SylvieConfig(mode=mode, **cfg_kw)
+    return GNNTrainer(model, pg, cfg, policy=policy, eps_s=eps_s,
+                      ckpt_dir=ckpt_dir, seed=seed)
+
+
+def _tel(epoch=0, n_sites=2, dims=(16, 24), stats=None, needs_sync=False):
+    return Telemetry(epoch=epoch, n_parts=4, n_sites=n_sites, site_dims=dims,
+                     site_stats=stats, needs_sync=needs_sync)
+
+
+# ---------------------------------------------------------------------------
+# Uniform == the config shim, bit for bit
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("mode,epochs", [("sync", 4), ("async", 6)])
+def test_uniform_bit_identical_to_config_shim(mode, epochs):
+    a = _trainer(mode=mode, bits=1)
+    b = _trainer(mode=mode, policy=Uniform(bits=1))
+    la = [a.train_epoch() for _ in range(epochs)]
+    lb = [b.train_epoch() for _ in range(epochs)]
+    assert [m.loss for m in la] == [m.loss for m in lb]      # exact
+    assert [m.mode for m in la] == [m.mode for m in lb]
+    assert a.comm_bytes_per_epoch() == b.comm_bytes_per_epoch()
+    assert la[0].policy == "uniform" and la[0].bits_per_site == ((1, 1),) * 2
+
+
+SHARDMAP_PARITY = """
+import repro.api as repro
+from repro.graph import synthetic
+
+g = synthetic.planted_partition(n_nodes=400, d_feat=16)
+from repro.models.gnn.models import GCN
+model = GCN(d_in=16, d_hidden=32, d_out=g.n_classes, n_layers=2)
+rt = repro.Runtime.from_mesh(repro.make_gnn_mesh(4))
+pg = repro.partition(g, n_parts=4)
+
+for mode, epochs in (("sync", 3), ("async", 4)):
+    a = repro.train(model, pg, mode=mode, bits=1, runtime=rt, epochs=epochs)
+    b = repro.train(model, pg, mode=mode, policy=repro.Uniform(bits=1),
+                    runtime=rt, epochs=epochs)
+    assert [m.loss for m in a.history] == [m.loss for m in b.history], mode
+    assert [m.mode for m in a.history] == [m.mode for m in b.history], mode
+print("OK")
+"""
+
+
+def test_uniform_shim_parity_shard_map_inline():
+    """Runs when the session already has >= 4 devices (CI --policy lane)."""
+    if len(jax.devices()) < 4:
+        pytest.skip("needs >= 4 devices (XLA_FLAGS="
+                    "--xla_force_host_platform_device_count=4)")
+    exec(textwrap.dedent(SHARDMAP_PARITY), {"repro": repro})
+
+
+@pytest.mark.slow
+def test_uniform_shim_parity_shard_map_subprocess():
+    prog = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import sys; sys.path.insert(0, {SRC!r})
+    """) + textwrap.dedent(SHARDMAP_PARITY)
+    r = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                       text=True, timeout=600)
+    assert r.returncode == 0, r.stdout[-3000:] + r.stderr[-3000:]
+    assert "OK" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# BoundedStaleness == use_sync_step, including resume's forced sync
+# ---------------------------------------------------------------------------
+def test_bounded_staleness_matches_use_sync_step():
+    pol = BoundedStaleness(eps_s=3)
+    got = [pol.decide(_tel(epoch=e)).sync for e in range(8)]
+    assert got == [use_sync_step(e, 3) for e in range(8)]
+    # pure Sylvie-A / always-sync corner cases
+    assert [BoundedStaleness(None).decide(_tel(epoch=e)).sync
+            for e in range(4)] == [True, False, False, False]
+    assert all(BoundedStaleness(1).decide(_tel(epoch=e)).sync
+               for e in range(4))
+    # a cache-coherence flag forces sync mid-interval
+    assert pol.decide(_tel(epoch=4, needs_sync=True)).sync
+
+
+def test_bounded_staleness_trainer_schedule():
+    tr = _trainer(mode="async", policy=BoundedStaleness(3), bits=1)
+    modes = [tr.train_epoch().mode for _ in range(7)]
+    assert modes == ["sync", "async", "async", "sync", "async", "async",
+                     "sync"]
+
+
+def test_elastic_resume_forces_sync_epoch(tmp_path):
+    """The old trainer-internal forced-sync survives as Telemetry.needs_sync:
+    an elastic repartition resume runs one synchronous refresh epoch even
+    though the policy's schedule says async."""
+    tr4 = _trainer(mode="async", policy=BoundedStaleness(5), parts=4,
+                   ckpt_dir=str(tmp_path))
+    for _ in range(3):
+        tr4.train_epoch()
+    tr4.save()
+
+    tr2 = _trainer(mode="async", policy=BoundedStaleness(5), parts=2,
+                   ckpt_dir=str(tmp_path))
+    assert tr2.resume() and tr2._needs_sync
+    assert tr2.train_epoch().mode == "sync"      # epoch 3: forced refresh
+    assert tr2.train_epoch().mode == "async"     # epoch 4: pipeline resumes
+
+
+def test_eps_s_kwarg_is_a_deprecation_shim():
+    with pytest.warns(DeprecationWarning, match="eps_s"):
+        a = _trainer(mode="async", eps_s=2, bits=1)
+    b = _trainer(mode="async", policy=BoundedStaleness(2), bits=1)
+    la = [a.train_epoch() for _ in range(5)]
+    lb = [b.train_epoch() for _ in range(5)]
+    assert [m.loss for m in la] == [m.loss for m in lb]
+    assert [m.mode for m in la] == [m.mode for m in lb]
+    with pytest.raises(ValueError, match="policy or eps_s"):
+        _trainer(mode="async", eps_s=2, policy=Uniform())
+
+
+# ---------------------------------------------------------------------------
+# AdaQPVariance: variance-directed bits inside the byte budget
+# ---------------------------------------------------------------------------
+def test_adaqp_assigns_more_bits_to_higher_variance_site():
+    rows = 800
+    stats = (SiteStats(dim=16, rows=rows, mean_range_sq=100.0),
+             SiteStats(dim=24, rows=rows, mean_range_sq=1e-4))
+    pol = AdaQPVariance(budget_bits=4)
+    d = pol.decide(_tel(epoch=3, stats=stats))
+    (f0, _), (f1, _) = d.bits_per_site()
+    assert f0 > f1, d.bits_per_site()
+    # payload stays inside the uniform-budget envelope
+    budget = sum(pol._payload(st, 4) for st in stats)
+    spent = sum(pol._payload(st, sd.fwd_bits)
+                for st, sd in zip(stats, d.sites))
+    assert spent <= budget
+    # no stats yet (epoch 0 / fresh resume): uniform at the budget width
+    d0 = pol.decide(_tel(epoch=0))
+    assert d0.sync and d0.bits_per_site() == ((4, 4),) * 2
+
+
+def test_adaqp_trainer_integration_planted_variance():
+    """Planted asymmetry: constant feature rows (site 0, range ~0) vs a
+    normally-spread hidden exchange (site 1) -> AdaQP gives site 1 more
+    bits while keeping site 0 at the 1-bit floor."""
+    tr = _trainer(mode="sync", policy=AdaQPVariance(budget_bits=4),
+                  flat_x=True)
+    hist = [tr.train_epoch() for _ in range(4)]
+    (f0, b0), (f1, b1) = hist[-1].bits_per_site
+    assert f1 > f0, hist[-1].bits_per_site
+    assert tr._site_stats[1].mean_range_sq > tr._site_stats[0].mean_range_sq
+    assert hist[-1].policy == "adaqp_variance(4)"
+    # budget respected by the trainer's heterogeneous accounting too
+    uniform4 = _trainer(mode="sync", policy=Uniform(bits=4), flat_x=True)
+    assert tr.comm_bytes_per_epoch()[0] <= uniform4.comm_bytes_per_epoch()[0]
+
+
+def test_recompile_budget_20_epoch_adaptive_run():
+    """<= 3 distinct jit traces of the train steps across a 20-epoch
+    AdaQPVariance run (sync warmup + adaptive async + at most one shift)."""
+    tr = _trainer(mode="async", policy=AdaQPVariance(budget_bits=4),
+                  flat_x=True)
+    gnn_step.TRACE_LOG.clear()
+    for _ in range(20):
+        tr.train_epoch()
+    assert len(gnn_step.TRACE_LOG) <= 3, gnn_step.TRACE_LOG
+    assert len(tr._step_cache) <= 2
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous accounting + pluggability
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class FixedPolicy:
+    """Third-party policy: implements the protocol, nothing else."""
+
+    @property
+    def name(self) -> str:
+        return "fixed"
+
+    def decide(self, tel):
+        return EpochDecision(
+            sites=(SiteDecision(fwd_bits=8, bwd_bits=2),
+                   SiteDecision(fwd_bits=1, bwd_bits=4)),
+            sync=True)
+
+
+def test_heterogeneous_bits_accounted_per_site_and_direction():
+    tr = _trainer(mode="sync", policy=FixedPolicy())
+    m = tr.train_epoch()
+    assert m.bits_per_site == ((8, 2), (1, 4)) and m.policy == "fixed"
+    plan, dims = tr.block.plan, tr.site_dims
+    payload = ec = 0
+    for d, (fb, bb) in zip(dims, m.bits_per_site):
+        for bits in (fb, bb):
+            pb, eb = exchange_bytes(plan, d, bits, tr.cfg.scale_dtype)
+            payload += pb
+            ec += eb
+    pb, eb = tr.comm_bytes_per_epoch()
+    assert (pb, eb) == (payload, ec)
+    assert m.comm_payload_mb == pytest.approx(payload / 1e6)
+
+
+def test_policy_with_wrong_site_count_rejected():
+    @dataclasses.dataclass(frozen=True)
+    class Bad:
+        name = "bad"
+
+        def decide(self, tel):
+            return EpochDecision(sites=(SiteDecision(),), sync=True)
+
+    tr = _trainer(mode="sync", policy=Bad())
+    with pytest.raises(ValueError, match="exchange sites"):
+        tr.train_epoch()
+
+
+# ---------------------------------------------------------------------------
+# Warmup / Chain / lattice snapping / EF bits
+# ---------------------------------------------------------------------------
+def test_warmup_schedule_and_payload_drop():
+    tr = _trainer(mode="sync", policy=Warmup(epochs=2, bits=1))
+    hist = [tr.train_epoch() for _ in range(4)]
+    assert [m.bits_per_site[0][0] for m in hist] == [32, 32, 1, 1]
+    assert hist[-1].comm_payload_mb < hist[0].comm_payload_mb / 16
+
+
+def test_chain_merges_conservatively():
+    pol = Chain(Warmup(epochs=2, bits=1), BoundedStaleness(3, bits=1))
+    # warmup phase: widest bits win; staleness schedule still drives sync
+    d1 = pol.decide(_tel(epoch=1))
+    assert d1.bits_per_site() == ((32, 32),) * 2 and not d1.sync
+    d3 = pol.decide(_tel(epoch=3))
+    assert d3.bits_per_site() == ((1, 1),) * 2 and d3.sync
+    assert pol.name.startswith("chain(")
+    # ef_bits=None is the full-precision (widest) all-reduce: any member
+    # keeping it wins over members that compress
+    mixed = Chain(Warmup(epochs=2), Uniform(bits=1, ef_bits=1))
+    assert mixed.decide(_tel(epoch=1)).ef_bits is None
+    both = Chain(Uniform(bits=1, ef_bits=1), Uniform(bits=1, ef_bits=4))
+    assert both.decide(_tel(epoch=1)).ef_bits == 4
+
+
+def test_epoch0_sync_warmup_enforced_against_policy():
+    """The zero-initialized halo caches must be warmed before any pipelined
+    step: even a policy that never requests sync gets epoch 0 synchronous."""
+    tr = _trainer(mode="async", policy=Uniform(bits=1, sync=False))
+    assert tr.train_epoch().mode == "sync"       # forced warmup
+    assert tr.train_epoch().mode == "async"
+
+
+def test_decision_lattice_snapping():
+    assert [snap_bits(b) for b in (1, 3, 5, 8, 9, 17, 64)] == \
+        [1, 4, 8, 8, 16, 32, 32]
+    assert snap_sample_p(0.43) == pytest.approx(0.45)
+    assert snap_sample_p(1.7) == pytest.approx(0.95)
+    d = EpochDecision(sites=(SiteDecision(fwd_bits=3, bwd_bits=5,
+                                          boundary_sample_p=0.42),),
+                      sync=False, ef_bits=3).snapped()
+    assert d.sites[0].fwd_bits == 4 and d.sites[0].bwd_bits == 8
+    assert d.ef_bits == 4
+    assert hash(d) == hash(d)            # usable as a step-cache key
+    assert d.step_key() == dataclasses.replace(d, sync=True).step_key()
+
+
+def test_ef_bits_ride_the_decision():
+    tr = _trainer(mode="sync", policy=Uniform(bits=1, ef_bits=2))
+    hist = [tr.train_epoch() for _ in range(10)]
+    assert hist[0].ef_bits == 2
+    assert hist[-1].loss < hist[0].loss          # EF training converges
+    assert all(np.isfinite(m.loss) for m in hist)
+    # EF payload joins the byte accounting
+    plain = _trainer(mode="sync", policy=Uniform(bits=1))
+    assert tr.comm_bytes_per_epoch()[0] > plain.comm_bytes_per_epoch()[0]
+
+
+def test_site_stats_telemetry_emitted():
+    tr = _trainer(mode="sync", policy=Uniform(bits=1))
+    tr.train_epoch()
+    stats = tr._site_stats
+    assert stats is not None and len(stats) == 2
+    assert stats[0].dim == 16 and stats[1].dim == 24
+    assert all(s.mean_range_sq > 0 for s in stats)
+    assert all(s.rows == tr.block.plan.real_rows for s in stats)

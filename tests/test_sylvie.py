@@ -93,8 +93,8 @@ def test_backward_scatter_adds_duplicate_sends():
     x = jnp.asarray(pg.x)
 
     def f(h):
-        halo = quantized_halo(h, plan, KEY, KEY, 32, False, jnp.bfloat16, None,
-                              "jnp")
+        halo = quantized_halo(h, plan, KEY, KEY, 32, 32, False, jnp.bfloat16,
+                              None, "jnp")
         return (halo ** 2).sum() / 2
 
     g = jax.grad(f)(x)

@@ -12,10 +12,18 @@
 #                              BENCH_halo.smoke.json; only full runs of
 #                              `python -m benchmarks.bench_halo` update the
 #                              tracked BENCH_halo.json)
+#   tools/ci.sh --policy       CommPolicy suite with 4 forced host devices
+#                              (runs the shard_map Uniform-parity check
+#                              in-process instead of skipping it)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 case "${1:-}" in
+  --policy)
+    shift
+    XLA_FLAGS="--xla_force_host_platform_device_count=4${XLA_FLAGS:+ $XLA_FLAGS}" \
+      exec python -m pytest -x -q tests/test_policy.py -m "not slow" "$@"
+    ;;
   --halo)
     shift
     XLA_FLAGS="--xla_force_host_platform_device_count=4${XLA_FLAGS:+ $XLA_FLAGS}" \
