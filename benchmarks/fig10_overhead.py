@@ -24,7 +24,7 @@ def _time(f, *args, n=20):
 
 
 def run() -> dict:
-    tr = common.make_trainer("planted-sm", "graphsage", parts=8,
+    tr = common.make_trainer(common.REF_DS, "graphsage", parts=8,
                              mode="sync", bits=1)
     block, x = tr.block, tr.x
     key = jax.random.PRNGKey(0)

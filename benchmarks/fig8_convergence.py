@@ -17,7 +17,7 @@ def run() -> dict:
     }
     curves = {}
     for name, v in variants.items():
-        tr = common.make_trainer("planted-sm", "gcn", parts=8,
+        tr = common.make_trainer(common.REF_DS, "gcn", parts=8,
                                  eps_s=v["eps"], **v["cfg"])
         accs = []
         for e in range(EPOCHS):
@@ -25,7 +25,7 @@ def run() -> dict:
             if (e + 1) % 5 == 0:
                 accs.append(round(tr.evaluate("val"), 4))
         curves[name] = accs
-    print("\n== Fig 8: val accuracy every 5 epochs (GCN, planted-sm) ==")
+    print(f"\n== Fig 8: val accuracy every 5 epochs (GCN, {common.REF_DS}) ==")
     rows = [[n] + [f"{a:.3f}" for a in accs] for n, accs in curves.items()]
     print(common.fmt_table(
         ["method"] + [f"e{5*(i+1)}" for i in range(EPOCHS // 5)], rows))

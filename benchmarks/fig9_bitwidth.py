@@ -40,12 +40,12 @@ def run() -> dict:
     rec = {}
     for bits in BITS:
         mode = "vanilla" if bits == 32 else "sync"
-        tr = common.make_trainer("planted-sm", "graphsage", parts=8,
+        tr = common.make_trainer(common.REF_DS, "graphsage", parts=8,
                                  mode=mode, bits=bits)
         tr.fit(EPOCHS)
         _row(rows, rec, bits, str(bits), tr, tr.evaluate("test"))
     for name, policy in POLICIES.items():
-        tr = common.make_trainer("planted-sm", "graphsage", parts=8,
+        tr = common.make_trainer(common.REF_DS, "graphsage", parts=8,
                                  mode="sync", policy=policy)
         tr.fit(EPOCHS)
         _row(rows, rec, name, name, tr, tr.evaluate("test"))

@@ -6,6 +6,12 @@ Each module prints its table, persists artifacts/bench/<name>.json and
 asserts the paper's qualitative claim holds (32x comm cut, throughput
 ordering, accuracy retention, ...). ``roofline`` additionally aggregates the
 dry-run artifacts when present.
+
+Datasets are named workloads from the ``repro.datasets`` registry
+(``benchmarks/common.DATASETS``); partition plans are cached under
+``artifacts/plans/``, so re-runs skip the Graph Engine. For ad-hoc sweeps
+beyond the paper's figures use the scenario runner:
+``python -m repro.launch.train --scenario ...``.
 """
 from __future__ import annotations
 

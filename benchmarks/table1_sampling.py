@@ -66,17 +66,17 @@ def _sampled_accuracy(g, fanout, epochs=EPOCHS, seed=0):
 
 
 def run() -> dict:
-    g, _ = common.build_dataset("planted-sm")
+    g, _ = common.build_dataset(common.REF_DS)
     rows = []
     for fanout in (5, 10, 15):
         acc = _sampled_accuracy(g, fanout)
         rows.append([f"sampled fanout={fanout}", f"{100*acc:.2f}"])
-    tr = common.make_trainer("planted-sm", "graphsage", parts=1,
+    tr = common.make_trainer(common.REF_DS, "graphsage", parts=1,
                              mode="vanilla", bits=32)
     tr.fit(EPOCHS)
     full = tr.evaluate("test")
     rows.append(["full-graph", f"{100*full:.2f}"])
-    print("\n== Table 1: sampling vs full-graph (GraphSAGE, planted-sm) ==")
+    print(f"\n== Table 1: sampling vs full-graph (GraphSAGE, {common.REF_DS}) ==")
     print(common.fmt_table(["training", "test acc %"], rows))
     rec = dict(rows=rows, full_graph_acc=full)
     common.save("table1_sampling", rec)

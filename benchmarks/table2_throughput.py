@@ -22,7 +22,7 @@ EPOCHS = 40
 def _modeled_epoch_s(tr, model_name, overlap: bool) -> float:
     pb, eb = tr.comm_bytes_per_epoch()   # totals across partitions
     comm = (pb + eb) / tr.pg.plan.n_parts / ICI_BW
-    g, _ = common.build_dataset("planted-sm")
+    g, _ = common.build_dataset(common.REF_DS)
     flops = _gnn_model_flops(model_name, tr.model, g.n_nodes, g.n_edges,
                              g.x.shape[1], True) / tr.pg.plan.n_parts
     comp = flops / PEAK_FLOPS_BF16
@@ -37,7 +37,7 @@ def run() -> dict:
     for model_name in ("graphsage", "gcn", "gat"):
         base = None
         for method, cfg_kw in common.METHODS.items():
-            tr = common.make_trainer("planted-sm", model_name, parts=8,
+            tr = common.make_trainer(common.REF_DS, model_name, parts=8,
                                      **cfg_kw)
             tr.fit(EPOCHS)
             acc = tr.evaluate("test")

@@ -11,9 +11,9 @@ import dataclasses
 
 import jax
 
+from repro import datasets
 from repro.core.quantization import straight_through_quantize
 from repro.core.sylvie import SylvieConfig
-from repro.graph import partition
 from repro.models.gnn.models import GCN, GraphSAGE
 from repro.train.trainer import GNNTrainer
 
@@ -55,11 +55,10 @@ def run() -> dict:
     rows = []
     rec = {}
     for name, ctor in (("graphsage", GraphSAGE), ("gcn", GCN)):
-        g, ew = common.build_dataset("planted-sm")
-        pg = partition.partition_graph(g, 8, edge_weight=ew)
+        pg, _ = datasets.load_partitioned(common.REF_DS, 8)
         accs = {}
         for variant in ("Sylvie-S", "QuantAll"):
-            model = ctor(g.x.shape[1], 64, g.n_classes, n_layers=2)
+            model = ctor(pg.x.shape[-1], 64, pg.n_classes, n_layers=2)
             if variant == "QuantAll":
                 model = QuantAllWrapper(model)
             tr = GNNTrainer(model, pg, SylvieConfig(mode="sync", bits=1))

@@ -3,7 +3,8 @@
     PYTHONPATH=src python examples/quickstart.py                       # simulated
     PYTHONPATH=src python examples/quickstart.py --runtime shard_map   # 1 part/device
 
-Partitions a synthetic community graph over 4 partitions, trains with
+Partitions the ``yelp_like`` named workload (repro.datasets) over 4
+partitions, trains with
 quantized boundary communication, and prints the comm-volume cut and final
 accuracy — the paper's core result at laptop scale. Everything goes through
 the ``repro.api`` facade: the *only* difference between the two invocations is
@@ -40,13 +41,14 @@ if ARGS.runtime == "shard_map":
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
 import repro.api as repro  # noqa: E402
-from repro.graph import synthetic  # noqa: E402
+from repro import datasets  # noqa: E402
 from repro.models.gnn.models import GCN  # noqa: E402
 
 
 def main() -> None:
-    # 1. a graph (swap in your own formats.Graph here)
-    g = synthetic.planted_partition(n_nodes=2000, d_feat=64, avg_degree=10)
+    # 1. a graph — a named workload from the registry (any
+    #    repro.graph.formats.Graph works; see datasets.names() for the rest)
+    g = datasets.load("yelp_like@small")
 
     # 2. pick the execution mode — one object, nothing else changes
     if ARGS.runtime == "shard_map":

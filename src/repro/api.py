@@ -1,8 +1,9 @@
 """repro.api — the one-import facade over the Sylvie reproduction.
 
     import repro.api as repro
+    from repro import datasets
 
-    g = synthetic.planted_partition(n_nodes=2000, d_feat=64)
+    g = datasets.load("yelp_like@small")          # or any formats.Graph
     runtime = repro.Runtime.simulated(4)          # or Runtime.from_mesh(mesh)
     pg = repro.partition(g, runtime=runtime)      # Graph Engine (paper step 1)
     trainer = repro.train(model, pg, mode="sync", bits=1,
@@ -11,15 +12,17 @@
 
 Execution mode — simulated stack vs. shard_map over a device mesh — is fixed
 by the :class:`Runtime` alone; model code and training config are identical in
-both. See DESIGN.md for the Runtime / HaloBackend architecture.
+both. The per-epoch communication schedule is a pluggable
+:class:`~repro.policy.base.CommPolicy` (``policy=repro.Uniform(bits=1)``,
+``repro.BoundedStaleness(eps_s=4)``, ...). See DESIGN.md §1/§4a for the
+Runtime / HaloBackend / CommPolicy architecture, §9 for named workloads
+(:mod:`repro.datasets`) and the scenario runner.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional
 
-import numpy as np
-
+from . import datasets  # noqa: F401
 from .core.sylvie import SylvieConfig
 from .dist import (HaloBackend, Runtime, ShardMapBackend,  # noqa: F401
                    SimulatedBackend)
@@ -46,21 +49,22 @@ def partition(g: formats.Graph, n_parts: Optional[int] = None, *,
     zero-valued attribute rows (matching the zero-length geometric edge).
     ``layout`` picks the halo buffer layout ("compact" ring buckets by default;
     "dense" pairwise blocks for comparison/debugging — see graph/partition.py).
+
+    Example::
+
+        pg = repro.partition(g, n_parts=8)                 # explicit count
+        pg = repro.partition(g, runtime=Runtime.simulated(4))
+        pg.plan.halo_rows, pg.plan.pad_efficiency()
+
+    For registry workloads, :func:`repro.datasets.load_partitioned` performs
+    the same normalization + partition behind the on-disk plan cache.
     """
     if n_parts is None and runtime is not None:
         n_parts = runtime.n_parts
     if n_parts is None:
         raise ValueError("pass n_parts or a runtime that fixes it")
-    ei = g.edge_index
-    ea = g.edge_attr
-    if self_loops:
-        n_before = ei.shape[1]
-        ei = formats.add_self_loops(ei, g.n_nodes)
-        if ea is not None:
-            pad = np.zeros((ei.shape[1] - n_before, ea.shape[1]), ea.dtype)
-            ea = np.concatenate([ea, pad], axis=0)
-    ew = formats.gcn_edge_weights(ei, g.n_nodes) if gcn_weights else None
-    g = dataclasses.replace(g, edge_index=ei, edge_attr=ea)
+    g, ew = formats.gcn_normalize(g, self_loops=self_loops,
+                                  gcn_weights=gcn_weights)
     return partlib.partition_graph(g, n_parts, method=method,
                                    edge_weight=ew, seed=seed,
                                    layout=layout, alignment=alignment)
@@ -82,8 +86,15 @@ def train(model, pg: partlib.PartitionedGraph,
     ``runtime`` defaults to the simulated stack at the graph's partition
     count.
 
-    .. deprecated:: ``eps_s=k`` — pass ``policy=BoundedStaleness(k)``
-       instead; the kwarg builds exactly that policy and warns.
+    Example::
+
+        tr = repro.train(model, pg, mode="async", bits=1, epochs=40,
+                         policy=repro.BoundedStaleness(eps_s=4))
+        tr.evaluate("test"), tr.comm_bytes_per_epoch()
+
+    .. deprecated:: ``eps_s=k`` — pass ``policy=BoundedStaleness(eps_s=k)``
+       instead; the kwarg builds exactly that policy (same bits/rounding as
+       the config) and warns. It will be removed once callers migrate.
     """
     if cfg is None:
         cfg = SylvieConfig(**cfg_kw)

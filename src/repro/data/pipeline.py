@@ -24,6 +24,7 @@ class Prefetcher:
         self._sharding = sharding
         self._done = object()
         self._err: Optional[BaseException] = None
+        self._finished = False
 
         def work():
             try:
@@ -46,9 +47,15 @@ class Prefetcher:
         return self
 
     def __next__(self):
+        if self._finished:               # don't block on the drained queue
+            raise StopIteration
         item = self._q.get()
         if item is self._done:
+            self._finished = True
             if self._err is not None:
+                # producer died mid-stream: every batch it finished was
+                # delivered above; the error surfaces exactly once here
+                # (generator semantics — later next() is StopIteration).
                 raise self._err
             raise StopIteration
         return item

@@ -1,0 +1,56 @@
+"""repro.datasets — named workloads + the partition-plan cache.
+
+The registry (:mod:`repro.datasets.registry`) maps a workload name and scale
+tier to a seeded synthetic :class:`~repro.graph.formats.Graph` calibrated to
+one of the paper's evaluation graphs; the plan cache
+(:mod:`repro.datasets.plans`) memoizes ``partition_graph`` on disk under
+``artifacts/plans/``. :func:`load_partitioned` composes the two — it is what
+the scenario runner and the benchmark harness call::
+
+    from repro import datasets
+    print(datasets.names())                     # ('amazon_like', ..., 'yelp_like')
+    g = datasets.load("products_like@small")    # host Graph, deterministic
+    pg, hit = datasets.load_partitioned("products_like@small", n_parts=8)
+"""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Optional
+
+from ..graph import formats
+from . import plans, registry
+from .plans import cached_partition, plan_key  # noqa: F401
+from .registry import (DEFAULT_TIER, TIERS, TargetStats,  # noqa: F401
+                       WorkloadSpec, get, load, names, parse, register)
+
+__all__ = [
+    "TIERS", "DEFAULT_TIER", "TargetStats", "WorkloadSpec", "register",
+    "names", "get", "parse", "load", "load_partitioned", "cached_partition",
+    "plan_key", "plans", "registry",
+]
+
+
+def load_partitioned(ref: str, n_parts: int, *, seed: int = 0,
+                     method: str = "block", layout: str = "compact",
+                     alignment: int = 8, self_loops: bool = True,
+                     gcn_weights: bool = True,
+                     cache_dir: Optional[Path] = None, refresh: bool = False):
+    """Registry load + GCN normalization + cached partition, in one call.
+
+    Returns ``(pg, hit)`` like :func:`repro.datasets.plans.cached_partition`.
+    Normalization matches :func:`repro.api.partition` (self-loops appended,
+    symmetric-normalized edge weights attached), so a cache entry written
+    here is exactly the partition a manual ``repro.api.partition`` of the
+    same graph would build::
+
+        pg, hit = load_partitioned("yelp_like@small", n_parts=8)
+        assert not hit                    # first run partitions and saves
+        pg, hit = load_partitioned("yelp_like@small", n_parts=8)
+        assert hit                        # second run loads artifacts/plans/
+    """
+    g = load(ref, seed=seed)
+    g, ew = formats.gcn_normalize(g, self_loops=self_loops,
+                                  gcn_weights=gcn_weights)
+    return cached_partition(g, n_parts, method=method, edge_weight=ew,
+                            seed=seed, layout=layout, alignment=alignment,
+                            cache_dir=cache_dir, refresh=refresh)

@@ -25,22 +25,46 @@ from .backend import HaloBackend, ShardMapBackend, SimulatedBackend
 
 @dataclasses.dataclass(frozen=True)
 class Runtime:
+    """Execution-mode facade: a backend + its placement/compilation policy.
+
+    Frozen and hashable — safe to share across trainers and to close over in
+    jitted code. The same model/config trains bit-compatibly under either
+    backend (``tests/test_runtime.py``)::
+
+        tr = GNNTrainer(model, pg, cfg, runtime=Runtime.simulated(4))
+        tr = GNNTrainer(model, pg, cfg, runtime=Runtime.from_mesh(mesh))
+    """
+
     backend: HaloBackend
 
     # -- constructors -------------------------------------------------------
     @staticmethod
     def simulated(n_parts: Optional[int] = None) -> "Runtime":
-        """Whole partition stack in one program (tests / CPU training)."""
+        """Whole partition stack in one program (tests / CPU training).
+
+        ``Runtime.simulated(4)`` commits to 4 partitions;
+        ``Runtime.simulated()`` accepts any partitioned graph.
+        """
         return Runtime(SimulatedBackend(n_parts))
 
     @staticmethod
     def from_mesh(mesh) -> "Runtime":
-        """One partition per device of ``mesh`` (the production path)."""
+        """One partition per device of ``mesh`` (the production path)::
+
+            mesh = repro.make_gnn_mesh(8)        # or launch/mesh.py builders
+            runtime = Runtime.from_mesh(mesh)
+        """
         return Runtime(ShardMapBackend(mesh))
 
     @staticmethod
     def sharded(n_parts: Optional[int] = None, axis_name: str = "parts") -> "Runtime":
-        """Shorthand: build a 1-D mesh over the host's devices and shard it."""
+        """Shorthand: build a 1-D mesh over the host's devices and shard it.
+
+        On CPU, force host devices first (before jax initializes)::
+
+            XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+                python train.py        # then Runtime.sharded(8)
+        """
         return Runtime.from_mesh(api.make_gnn_mesh(n_parts, axis_name))
 
     # -- introspection ------------------------------------------------------

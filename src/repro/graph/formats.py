@@ -63,6 +63,28 @@ def gcn_edge_weights(edge_index: np.ndarray, n_nodes: int) -> np.ndarray:
     return (inv_sqrt[edge_index[0]] * inv_sqrt[edge_index[1]]).astype(np.float32)
 
 
+def gcn_normalize(g: Graph, *, self_loops: bool = True,
+                  gcn_weights: bool = True):
+    """The canonical GCN pre-partition normalization: append self-loops
+    (zero-valued attribute rows for graphs carrying ``edge_attr`` — matching
+    the zero-length geometric edge) and attach symmetric-normalized weights.
+
+    Returns ``(graph, edge_weight)``. This is the one definition shared by
+    ``repro.api.partition``, ``repro.datasets.load_partitioned``, the launch
+    CLI, and the benchmark harness, so a plan cached through any of them is
+    the partition every other path would build.
+    """
+    ei, ea = g.edge_index, g.edge_attr
+    if self_loops:
+        n_before = ei.shape[1]
+        ei = add_self_loops(ei, g.n_nodes)
+        if ea is not None:
+            pad = np.zeros((ei.shape[1] - n_before, ea.shape[1]), ea.dtype)
+            ea = np.concatenate([ea, pad], axis=0)
+    ew = gcn_edge_weights(ei, g.n_nodes) if gcn_weights else None
+    return dataclasses.replace(g, edge_index=ei, edge_attr=ea), ew
+
+
 def mean_edge_weights(edge_index: np.ndarray, n_nodes: int) -> np.ndarray:
     """1/deg_in(dst) weights — mean aggregation as edge weights (GraphSAGE-mean)."""
     deg = np.bincount(edge_index[1], minlength=n_nodes).astype(np.float64)

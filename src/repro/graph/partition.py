@@ -273,8 +273,8 @@ def partition_graph(g: Graph, n_parts: int, method: str = "block",
 
 # ---------------------------------------------------------------------------
 # Analytic plan *shapes* for the full-config dry-run (no 62M-edge graph is
-# materialized; .lower() only needs ShapeDtypeStructs). The model and its
-# parameters are documented in DESIGN.md §5 / EXPERIMENTS.md §Dry-run.
+# materialized; .lower() only needs ShapeDtypeStructs). Used by
+# launch/dryrun.py; the sharding contract is DESIGN.md §5.
 # The dry-run sizes the dense layout (the conservative upper bound).
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)

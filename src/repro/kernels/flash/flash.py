@@ -1,7 +1,7 @@
 """Pallas TPU flash-attention forward (identified §Perf next-lever).
 
 The dry-run's dominant LM memory term is the per-block f32 score tensors the
-XLA path materializes to HBM (EXPERIMENTS.md §Perf). This kernel keeps each
+XLA path materializes to HBM. This kernel keeps each
 (blk_q x blk_k) score tile in VMEM: per (batch-head, q-block) it sweeps KV
 blocks on the innermost sequential grid axis, carrying the online-softmax
 running (max, sum) and the output accumulator in the output refs — HBM sees

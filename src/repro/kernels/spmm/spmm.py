@@ -2,7 +2,7 @@
 
 The paper leans on cuSPARSE SpMM for aggregation and cites its lack of low-
 precision support as a reason to keep *compute* in fp32 (quantizing only the
-wire). On TPU there is no cuSPARSE; the TPU-native adaptation (DESIGN.md §2) is
+wire). On TPU there is no cuSPARSE; the TPU-native adaptation is
 a gather-accumulate over a padded-CSR neighbor list, tiled so each step works
 entirely out of VMEM:
 

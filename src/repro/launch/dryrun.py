@@ -3,7 +3,8 @@ os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + \
     " --xla_force_host_platform_device_count=512"
 
 """Multi-pod dry-run: lower + compile every (arch × shape) for the production
-meshes and emit the roofline artifacts (EXPERIMENTS.md §Dry-run / §Roofline).
+meshes and emit the roofline artifacts under artifacts/dryrun/ (aggregated
+by benchmarks/roofline.py; CPU-measurement caveat: DESIGN.md §8).
 
 The two lines above MUST run before any other import (jax locks the device
 count on first init); 512 placeholder host devices back both the 16x16
@@ -68,7 +69,7 @@ def run_cell(arch: str, shape: str, mesh_kind: str, out_dir: Path,
         # probes (depth 1 and 2) recover the exact full-depth numbers:
         #   cost(count) = cost(d1) + (count - 1) * (cost(d2) - cost(d1)).
         # Probes run on the single-pod mesh only — the multi-pod pass is the
-        # compile proof (the roofline table is single-pod per EXPERIMENTS.md).
+        # compile proof (the roofline table aggregates single-pod only).
         probes = {}
         for d in (1, 2):
             c = cellslib.build_cell(arch, shape, mesh, unroll=True, depth=d)

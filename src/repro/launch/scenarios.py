@@ -1,0 +1,241 @@
+"""Scenario-matrix runner: declarative arch x dataset x policy x runtime
+sweeps over the named-workload registry.
+
+A :class:`Scenario` declares the axes; :func:`run_scenario` expands the cross
+product, drives one :class:`~repro.train.trainer.GNNTrainer` per cell (graphs
+come from :func:`repro.datasets.load_partitioned`, so repeated runs hit the
+partition-plan cache), and writes one machine-readable report JSON per cell
+under ``artifacts/scenarios/<scenario>/`` plus a ``summary.json`` (schema:
+DESIGN.md §9). CLI::
+
+    PYTHONPATH=src python -m repro.launch.train --scenario smoke
+    PYTHONPATH=src python -m repro.launch.train --scenario paper
+
+Policy axis entries are compact specs (``parse_policy``): ``uniform:BITS``,
+``warmup:EPOCHS:BITS``, ``bounded_staleness:EPS_S:BITS``, ``adaqp:BUDGET``.
+Runtime axis entries are ``simulated`` (stacked reference, any machine) or
+``sharded`` (one partition per host device — set
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` on CPU).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import json
+import time
+from pathlib import Path
+from typing import Optional
+
+from .. import datasets
+from .. import policy as P
+from ..core.sylvie import SylvieConfig
+from ..dist.runtime import Runtime
+from ..models.gnn.models import PAPER_ARCHS as ARCHS
+from ..train.trainer import GNNTrainer
+from .mesh import ICI_BW
+
+
+def parse_policy(spec: str):
+    """Compact policy spec -> CommPolicy. ``uniform:32``, ``warmup:5:1``,
+    ``bounded_staleness:4:1``, ``adaqp:4``."""
+    kind, *args = spec.split(":")
+    a = [int(x) for x in args]
+    if kind == "uniform":
+        return P.Uniform(bits=a[0] if a else 1)
+    if kind == "warmup":
+        return P.Warmup(epochs=a[0] if a else 5, bits=a[1] if len(a) > 1 else 1)
+    if kind == "bounded_staleness":
+        return P.BoundedStaleness(eps_s=a[0] if a else None,
+                                  bits=a[1] if len(a) > 1 else 1)
+    if kind == "adaqp":
+        return P.AdaQPVariance(budget_bits=a[0] if a else 4)
+    raise KeyError(f"unknown policy spec {spec!r}; known kinds: uniform, "
+                   "warmup, bounded_staleness, adaqp")
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    """One point of the matrix. ``cell_id`` names the report file."""
+
+    arch: str
+    dataset: str                        # registry ref, "name@tier"
+    policy: str                         # parse_policy spec
+    mode: str                           # "sync" | "async" | "vanilla"
+    runtime: str                        # "simulated" | "sharded"
+
+    @property
+    def cell_id(self) -> str:
+        pol = self.policy.replace(":", "-")
+        return f"{self.arch}__{self.dataset}__{pol}__{self.mode}" \
+               f"__{self.runtime}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """A declarative arch x dataset x policy x mode x runtime matrix."""
+
+    name: str
+    archs: tuple[str, ...]
+    datasets: tuple[str, ...]
+    policies: tuple[str, ...]
+    modes: tuple[str, ...] = ("sync",)
+    runtimes: tuple[str, ...] = ("simulated",)
+    parts: int = 4
+    epochs: int = 3
+    seed: int = 0
+
+    def cells(self) -> tuple[Cell, ...]:
+        """The expanded cross product, in deterministic order."""
+        return tuple(Cell(a, d, p, m, r) for a, d, p, m, r
+                     in itertools.product(self.archs, self.datasets,
+                                          self.policies, self.modes,
+                                          self.runtimes))
+
+
+SCENARIOS: dict[str, Scenario] = {
+    # CI-sized: 2 archs x 2 datasets x 2 policies, 8 cells, < ~2 min on CPU.
+    "smoke": Scenario(
+        name="smoke",
+        archs=("gcn", "graphsage"),
+        datasets=("yelp_like@smoke", "products_like@smoke"),
+        policies=("uniform:1", "warmup:2:1"),
+        parts=4, epochs=3),
+    # Policy sweep on the two benchmark reference graphs.
+    "policies": Scenario(
+        name="policies",
+        archs=("graphsage",),
+        datasets=("yelp_like@small", "products_like@small"),
+        policies=("uniform:32", "uniform:4", "uniform:1", "warmup:5:1",
+                  "bounded_staleness:4:1", "adaqp:4"),
+        modes=("sync", "async"),
+        parts=8, epochs=40),
+    # The paper-shaped full matrix (hours on CPU; run cells with --only).
+    "paper": Scenario(
+        name="paper",
+        archs=("gcn", "graphsage", "gat"),
+        datasets=("reddit_like@small", "yelp_like@small",
+                  "products_like@small", "amazon_like@small"),
+        policies=("uniform:32", "uniform:1", "adaqp:4"),
+        modes=("sync", "async"),
+        parts=8, epochs=40),
+}
+
+
+def default_out_dir() -> Path:
+    """``<repo>/artifacts/scenarios`` (tracked README explains the layout)."""
+    return Path(__file__).resolve().parents[3] / "artifacts" / "scenarios"
+
+
+def run_cell(scn: Scenario, cell: Cell, *,
+             cache_dir: Optional[Path] = None,
+             loaded: Optional[dict] = None) -> dict:
+    """Train one cell and return its report dict (not yet written).
+
+    ``loaded`` memoizes partitioned graphs within one run — cells sharing a
+    dataset reuse the first load instead of re-generating and re-hashing the
+    graph per cell; their ``plan_cache_hit`` reports that load's disk
+    outcome.
+    """
+    key = (cell.dataset, scn.parts, scn.seed)
+    if loaded is None or key not in loaded:
+        entry = datasets.load_partitioned(
+            cell.dataset, scn.parts, seed=scn.seed, cache_dir=cache_dir)
+        if loaded is not None:
+            loaded[key] = entry
+    else:
+        entry = loaded[key]
+    pg, cache_hit = entry
+    model = ARCHS[cell.arch](pg.x.shape[-1], pg.n_classes)
+    if cell.runtime == "sharded":
+        runtime = Runtime.sharded(scn.parts)
+    elif cell.runtime == "simulated":
+        runtime = Runtime.simulated(scn.parts)
+    else:
+        raise KeyError(f"unknown runtime {cell.runtime!r}")
+    policy = parse_policy(cell.policy)
+    cfg = SylvieConfig(mode=cell.mode)
+    tr = GNNTrainer(model, pg, cfg, policy=policy, runtime=runtime,
+                    seed=scn.seed)
+    t0 = time.time()
+    tr.fit(scn.epochs)
+    seconds = time.time() - t0
+    pb, eb = tr.comm_bytes_per_epoch()
+    wb, web = tr.wire_bytes_per_epoch()
+    return {
+        "scenario": scn.name, "cell": cell.cell_id,
+        "arch": cell.arch, "dataset": cell.dataset,
+        "policy": tr.policy.name, "policy_spec": cell.policy,
+        "mode": cell.mode, "runtime": cell.runtime,
+        "n_parts": scn.parts, "epochs": scn.epochs, "seed": scn.seed,
+        "plan_cache_hit": bool(cache_hit),
+        "final_loss": float(tr.history[-1].loss),
+        "val_acc": float(tr.evaluate("val")),
+        "test_acc": float(tr.evaluate("test")),
+        # exact true-wire bytes per epoch (hardware-independent) + what the
+        # plan layout actually ships, and the DESIGN §8 modeled TPU comm time.
+        "comm_payload_bytes_per_epoch": float(pb),
+        "comm_ec_bytes_per_epoch": float(eb),
+        "wire_payload_bytes_per_epoch": float(wb),
+        "wire_ec_bytes_per_epoch": float(web),
+        "modeled_tpu_comm_s": float((pb + eb) / scn.parts / ICI_BW),
+        "bits_per_site": [list(b) for b in tr.history[-1].bits_per_site],
+        "seconds": seconds,
+    }
+
+
+def resolve(scenario) -> Scenario:
+    """Accept a Scenario or a name from :data:`SCENARIOS`."""
+    if isinstance(scenario, Scenario):
+        return scenario
+    if scenario not in SCENARIOS:
+        raise KeyError(f"unknown scenario {scenario!r}; "
+                       f"known: {sorted(SCENARIOS)}")
+    return SCENARIOS[scenario]
+
+
+def run_scenario(scenario, *, out_dir: Optional[Path] = None,
+                 cache_dir: Optional[Path] = None,
+                 only: Optional[str] = None) -> list[dict]:
+    """Expand + run a scenario; one report JSON per cell + a summary.
+
+    ``only`` is a substring filter over cell ids (run a slice of a big
+    matrix, e.g. ``only="gat"`` or ``only="amazon_like"``). A filtered run
+    rewrites only its own cell reports; ``summary.json`` is rebuilt from
+    *all* cell files on disk, so running a matrix slice by slice converges
+    to the full summary instead of clobbering it.
+    """
+    scn = resolve(scenario)
+    cells = [c for c in scn.cells() if only is None or only in c.cell_id]
+    if not cells:
+        raise ValueError(f"--only {only!r} matched no cell of {scn.name!r}")
+    out = (Path(out_dir) if out_dir is not None else default_out_dir()) \
+        / scn.name
+    out.mkdir(parents=True, exist_ok=True)
+    reports = []
+    loaded: dict = {}
+    for i, cell in enumerate(cells):
+        t0 = time.time()
+        rep = run_cell(scn, cell, cache_dir=cache_dir, loaded=loaded)
+        (out / f"{cell.cell_id}.json").write_text(
+            json.dumps(rep, indent=1, default=float))
+        reports.append(rep)
+        print(f"[{i+1:3d}/{len(cells)}] {cell.cell_id:60s} "
+              f"test={rep['test_acc']:.3f} "
+              f"comm={rep['comm_payload_bytes_per_epoch']/1e6:7.2f}MB/ep "
+              f"cache={'hit' if rep['plan_cache_hit'] else 'miss'} "
+              f"{time.time()-t0:5.1f}s")
+    if only is None:
+        # a full run defines the matrix: drop cell files orphaned by a
+        # scenario-definition change so the summary never resurrects them
+        current = {f"{c.cell_id}.json" for c in cells}
+        for f in out.glob("*.json"):
+            if f.name != "summary.json" and f.name not in current:
+                f.unlink()
+    all_cells = [json.loads(f.read_text())
+                 for f in sorted(out.glob("*.json")) if f.name != "summary.json"]
+    (out / "summary.json").write_text(
+        json.dumps({"scenario": scn.name, "n_cells": len(all_cells),
+                    "cells": all_cells}, indent=1, default=float))
+    print(f"wrote {len(reports)} cell reports; summary.json covers "
+          f"{len(all_cells)} cells -> {out}")
+    return reports

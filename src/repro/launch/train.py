@@ -4,11 +4,17 @@ GNN archs (the paper's setting) train full-graph with Sylvie quantized halo
 exchange; LM archs train on the synthetic token stream or serve batched
 decode; DLRM trains on the synthetic Criteo stream.
 
+``--scenario`` switches to the matrix runner (``launch/scenarios.py``): the
+named arch x dataset x policy x runtime sweep runs end-to-end and writes one
+report JSON per cell under ``artifacts/scenarios/<name>/``.
+
 Examples (CPU-sized; production meshes via launch/dryrun.py):
     python -m repro.launch.train --arch gcn --mode sync --bits 1 --epochs 50
-    python -m repro.launch.train --arch gcn --mode async --eps-s 5 --parts 8
+    python -m repro.launch.train --arch gcn --graph reddit_like@small --parts 8
     python -m repro.launch.train --arch olmoe-1b-7b --reduced --steps 50
     python -m repro.launch.train --arch dlrm-mlperf --reduced --steps 100
+    python -m repro.launch.train --scenario smoke
+    python -m repro.launch.train --scenario paper --only amazon_like
 """
 from __future__ import annotations
 
@@ -48,14 +54,16 @@ def train_gnn(args) -> None:
     from ..models.gnn import blocks as B
     from ..train.trainer import GNNTrainer
 
+    from .. import datasets
+
     spec = configlib.get(args.arch)
     arch = spec.reduced() if args.reduced else spec.config()
-    g = synthetic.by_name(args.graph, seed=args.seed)
-    ei = formats.add_self_loops(g.edge_index, g.n_nodes)
-    ew = formats.gcn_edge_weights(ei, g.n_nodes)
-    g = formats.Graph(g.n_nodes, ei, g.x, g.y, g.train_mask, g.val_mask,
-                      g.test_mask, pos=g.pos, n_classes=g.n_classes,
-                      edge_attr=None)
+    if args.graph in synthetic.GENERATORS:     # raw generator, default kwargs
+        g = synthetic.by_name(args.graph, seed=args.seed)
+    else:                              # named workload ("reddit_like@small");
+        # a typo raises the registry's KeyError listing the known names/tiers
+        g = datasets.load(args.graph, seed=args.seed)
+    g, ew = formats.gcn_normalize(g)
     if arch.d_edge_attr:
         if g.pos is None:
             rng = np.random.default_rng(0)
@@ -161,14 +169,27 @@ def train_dlrm(args) -> None:
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default=None,
+                    help="architecture id (required unless --scenario)")
     ap.add_argument("--reduced", action="store_true",
                     help="use the smoke-scale config (CPU-sized)")
     ap.add_argument("--serve", action="store_true",
                     help="LM: batched prefill+decode instead of training")
+    # scenario-matrix runner (repro.launch.scenarios)
+    ap.add_argument("--scenario", default=None,
+                    help="run a named arch x dataset x policy x runtime "
+                         "matrix end-to-end (smoke | policies | paper); "
+                         "writes artifacts/scenarios/<name>/*.json")
+    ap.add_argument("--only", default=None,
+                    help="with --scenario: substring filter over cell ids")
+    ap.add_argument("--scenario-dir", default=None,
+                    help="with --scenario: report directory override")
     # GNN
     ap.add_argument("--graph", default="planted",
-                    choices=["planted", "powerlaw", "grid", "molecule"])
+                    help="named workload ref ('reddit_like@small', see "
+                         "repro.datasets.names()) or raw generator name "
+                         "(planted | powerlaw | powerlaw_community | grid | "
+                         "molecule)")
     ap.add_argument("--parts", type=int, default=4)
     ap.add_argument("--mode", default="sync",
                     choices=["vanilla", "sync", "async"])
@@ -193,6 +214,14 @@ def main() -> None:
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    if args.scenario:
+        from .scenarios import run_scenario
+        run_scenario(args.scenario, only=args.only,
+                     out_dir=args.scenario_dir)
+        return
+    if args.arch is None:
+        ap.error("--arch is required (or pass --scenario)")
 
     from .. import configs as configlib
     kind = configlib.get(args.arch).kind

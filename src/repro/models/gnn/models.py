@@ -284,3 +284,15 @@ class SchNet:
             v = nn.linear(lp["dense2"], act(nn.linear(lp["dense1"], agg)))
             h = h + v
         return nn.mlp(params["out"], h, act=act)
+
+
+# Canonical benchmark-scale factories for the paper's three architectures —
+# the single definition the benchmark harness (benchmarks/common.MODELS) and
+# the scenario runner (launch/scenarios.ARCHS) both resolve "gcn" /
+# "graphsage" / "gat" through, so a scenario report and a fig/table row with
+# the same arch name are always the same model.
+PAPER_ARCHS = {
+    "gcn": lambda d_in, d_out: GCN(d_in, 64, d_out, n_layers=2),
+    "graphsage": lambda d_in, d_out: GraphSAGE(d_in, 64, d_out, n_layers=2),
+    "gat": lambda d_in, d_out: GAT(d_in, 16, d_out, n_layers=2, heads=4),
+}

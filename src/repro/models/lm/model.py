@@ -39,7 +39,7 @@ from .config import AttnConfig, LayerConfig, LMConfig, MoEConfig
 
 # ---------------------------------------------------------------------------
 # sharding context: explicit activation annotations (GSPMD alone mis-places
-# the batch axis in the attention scan — see EXPERIMENTS.md §Perf iteration 1)
+# the batch axis in the attention scan without them)
 # ---------------------------------------------------------------------------
 
 

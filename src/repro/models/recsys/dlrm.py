@@ -22,8 +22,8 @@ the full flattened mesh with replicated weights + gradient ``psum``.
 
 This file also hosts the *beyond-paper* Sylvie tie-in: the embedding exchange
 is an activation collective with exactly the halo-exchange structure, so the
-Low-bit Module can quantize it (``quantize_collective`` flag; off by default —
-evaluated in EXPERIMENTS.md §Perf).
+Low-bit Module can quantize it (``quantize_collective`` flag; off by
+default).
 """
 from __future__ import annotations
 

@@ -44,7 +44,11 @@ SAMPLE_P_STEP = 0.05
 
 
 def snap_bits(bits: int | float) -> int:
-    """Round a requested bit-width *up* to the nearest lattice width."""
+    """Round a requested bit-width *up* to the nearest lattice width::
+
+        snap_bits(3)    # -> 4
+        snap_bits(100)  # -> 32 (clamped to the widest lattice point)
+    """
     for b in BIT_LATTICE:
         if bits <= b:
             return b
@@ -53,7 +57,11 @@ def snap_bits(bits: int | float) -> int:
 
 def snap_sample_p(p: float) -> float:
     """Round a boundary-sampling rate to the lattice grid, clamped to
-    [0, 0.95] (p=1 would drop every halo row)."""
+    [0, 0.95] (p=1 would drop every halo row)::
+
+        snap_sample_p(0.33)  # -> 0.35
+        snap_sample_p(1.0)   # -> 0.95
+    """
     q = round(float(p) / SAMPLE_P_STEP) * SAMPLE_P_STEP
     return min(max(q, 0.0), 0.95)
 
@@ -67,6 +75,10 @@ class SiteDecision:
     directions are independent code paths through the custom_vjps in
     ``core/sylvie.py``. ``boundary_sample_p`` is the BNS-GCN keep-out rate
     (0 disables).
+
+    Example — 1-bit features forward, 8-bit gradients backward::
+
+        SiteDecision(fwd_bits=1, bwd_bits=8, stochastic=True)
     """
 
     fwd_bits: int = 1
@@ -103,6 +115,10 @@ class EpochDecision:
       the synchronous step.
     * ``ef_bits`` — EF21-compressed weight-gradient all-reduce bit-width
       (``None`` = full-precision psum, the paper's setting).
+
+    Example — Sylvie-S at 1 bit on a 2-site model::
+
+        EpochDecision.uniform(n_sites=2, bits=1, sync=True)
     """
 
     sites: tuple[SiteDecision, ...]
@@ -205,6 +221,21 @@ class CommPolicy(Protocol):
     call it speculatively, e.g. for byte accounting). The returned decision is
     snapped to the lattice and used as the step-compilation cache key, so a
     well-behaved policy emits few distinct decisions over a run.
+
+    A policy is any object with ``decide`` + ``name`` — e.g. one that widens
+    bits whenever validation accuracy stalls::
+
+        @dataclasses.dataclass(frozen=True)
+        class WidenOnPlateau:
+            name: str = "widen_on_plateau"
+            def decide(self, tel):
+                stalled = (len(tel.val_history) >= 2
+                           and tel.val_history[-1] <= tel.val_history[-2])
+                return EpochDecision.uniform(tel.n_sites,
+                                             bits=4 if stalled else 1,
+                                             sync=tel.needs_sync)
+
+        GNNTrainer(model, pg, cfg, policy=WidenOnPlateau())
     """
 
     def decide(self, tel: Telemetry) -> EpochDecision: ...

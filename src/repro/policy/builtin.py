@@ -41,7 +41,13 @@ def _uniform_sites(tel: Telemetry, bits: int, stochastic: bool,
 class Uniform:
     """One static decision for every site and epoch — the paper default.
     ``sync=None`` lets the mode decide (epoch 0 warmup only, pure Sylvie-A
-    afterwards); ``sync=True`` forces every epoch synchronous."""
+    afterwards); ``sync=True`` forces every epoch synchronous.
+
+    Example::
+
+        repro.train(model, pg, mode="sync", policy=Uniform(bits=1))
+        Uniform(bits=32)                  # the fp32 vanilla baseline
+    """
 
     bits: int = 1
     stochastic: bool = True
@@ -71,7 +77,12 @@ class Uniform:
 
 @dataclasses.dataclass(frozen=True)
 class Warmup:
-    """Full-precision exchanges for ``epochs`` epochs, then ``bits``."""
+    """Full-precision exchanges for ``epochs`` epochs, then ``bits``.
+
+    Example — ease early-training quantization noise, then go one-bit::
+
+        repro.train(model, pg, policy=Warmup(epochs=5, bits=1), epochs=40)
+    """
 
     epochs: int = 5
     bits: int = 1
@@ -97,7 +108,14 @@ class BoundedStaleness:
     synchronous cache-refresh epoch every ``eps_s`` epochs (``None`` = pure
     Sylvie-A, ``1`` = always synchronous); epoch 0 and any
     ``Telemetry.needs_sync`` epoch (resume, elastic repartition) are forced
-    synchronous."""
+    synchronous.
+
+    Example — Sylvie-A with a cache refresh every 4 epochs (the setting the
+    deprecated ``GNNTrainer(eps_s=4)`` shim maps onto)::
+
+        repro.train(model, pg, mode="async",
+                    policy=BoundedStaleness(eps_s=4, bits=1))
+    """
 
     eps_s: Optional[int] = None
     bits: int = 1
@@ -132,6 +150,10 @@ class AdaQPVariance:
     ``budget_bits``. The trainer smooths the stats with an EMA, so the
     assignment converges and stays on one lattice point — the recompile
     budget in practice is sync-warmup + one or two adaptive decisions.
+
+    Example — spend a uniform-4-bit byte envelope where variance is worst::
+
+        repro.train(model, pg, policy=AdaQPVariance(budget_bits=4))
     """
 
     budget_bits: int = 4

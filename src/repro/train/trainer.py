@@ -72,6 +72,22 @@ class EpochMetrics:
 
 
 class GNNTrainer:
+    """Full-graph trainer over a partitioned graph.
+
+    Example::
+
+        pg, _ = datasets.load_partitioned("yelp_like@small", n_parts=4)
+        tr = GNNTrainer(GCN(pg.x.shape[-1], 64, pg.n_classes), pg,
+                        SylvieConfig(mode="async", bits=1),
+                        policy=BoundedStaleness(eps_s=4))
+        tr.fit(40); tr.evaluate("test")
+
+    .. deprecated:: ``eps_s=k`` — the pre-policy staleness knob. It now
+       builds ``policy=BoundedStaleness(eps_s=k, bits=cfg.effective_bits,
+       stochastic=cfg.stochastic, boundary_sample_p=cfg.boundary_sample_p)``
+       and warns; pass that policy yourself instead.
+    """
+
     def __init__(self, model, pg, cfg: Optional[SylvieConfig] = None,
                  opt: Optional[optlib.Optimizer] = None,
                  policy: Optional[CommPolicy] = None,

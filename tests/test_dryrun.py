@@ -1,8 +1,8 @@
 """Dry-run machinery: cell building, HLO collective parser, roofline math.
 
-Full production-mesh lowering is exercised by launch/dryrun.py (results in
-EXPERIMENTS.md); here we validate the machinery at subprocess scale so the
-suite stays minutes-fast.
+Full production-mesh lowering is exercised by launch/dryrun.py (artifacts
+under artifacts/dryrun/); here we validate the machinery at subprocess scale
+so the suite stays minutes-fast.
 """
 import subprocess
 import sys

@@ -41,6 +41,26 @@ def test_prefetcher_propagates_errors():
             pass
 
 
+def test_prefetcher_surfaces_midstream_error_after_buffered_batches():
+    """A producer that dies mid-stream (after the queue is already full)
+    must first deliver every batch it produced, then raise — not hang, not
+    swallow the error, not reorder."""
+    def bad():
+        for i in range(4):
+            yield np.full((2,), i)
+        raise ValueError("died at batch 4")
+
+    it = Prefetcher(bad(), depth=2)       # queue smaller than the stream
+    time.sleep(0.2)                       # producer blocks on the full queue
+    got = []
+    with pytest.raises(ValueError, match="died at batch 4"):
+        for batch in it:
+            got.append(int(np.asarray(batch)[0]))
+    assert got == [0, 1, 2, 3]            # all good batches arrived, in order
+    with pytest.raises(StopIteration):    # the error is raised exactly once
+        next(it)
+
+
 def test_token_stream_shapes_and_determinism():
     a = list(token_stream(100, 4, 8, seed=3, n_batches=3))
     b = list(token_stream(100, 4, 8, seed=3, n_batches=3))

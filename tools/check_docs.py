@@ -1,0 +1,103 @@
+#!/usr/bin/env python
+"""Docs lane (``tools/ci.sh --docs``): keep the documentation honest.
+
+Two checks:
+
+1. **Link check** — every relative markdown link in README.md / DESIGN.md /
+   CHANGES.md must point at a file that exists (http(s)/mailto links are not
+   fetched; ``#fragment`` suffixes are stripped).
+2. **Command check** — every ```` ```bash ```` fenced block in README.md is
+   executed from the repo root (``bash -euo pipefail``, ``PYTHONPATH=src``).
+   Display-only snippets (install lines, long sweeps) use ```` ```text ````
+   or ```` ```python ```` fences and are skipped — the convention that makes
+   "every bash command in the README runs green" checkable.
+
+Exit status is non-zero on any broken link or failing command.
+"""
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+LINK_FILES = ("README.md", "DESIGN.md", "CHANGES.md")
+RUN_FILE = "README.md"
+
+LINK_RE = re.compile(r"\[[^\]]+\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"^```(\w*)\s*$")
+
+
+def check_links() -> list[str]:
+    errors = []
+    for name in LINK_FILES:
+        path = ROOT / name
+        if not path.exists():
+            errors.append(f"{name}: file missing")
+            continue
+        for i, line in enumerate(path.read_text().splitlines(), 1):
+            for target in LINK_RE.findall(line):
+                if target.startswith(("http://", "https://", "mailto:")):
+                    continue
+                rel = target.split("#", 1)[0]
+                if not rel:                    # pure in-page anchor
+                    continue
+                if not (path.parent / rel).exists():
+                    errors.append(f"{name}:{i}: broken link -> {target}")
+    return errors
+
+
+def bash_blocks(text: str) -> list[tuple[int, str]]:
+    """(first_line_no, script) for each ```bash fenced block."""
+    blocks, cur, lang, start = [], None, None, 0
+    for i, line in enumerate(text.splitlines(), 1):
+        m = FENCE_RE.match(line)
+        if m and cur is None:
+            lang, cur, start = m.group(1), [], i + 1
+        elif line.strip() == "```" and cur is not None:
+            if lang == "bash":
+                blocks.append((start, "\n".join(cur)))
+            cur, lang = None, None
+        elif cur is not None:
+            cur.append(line)
+    return blocks
+
+
+def run_blocks() -> list[str]:
+    errors = []
+    env = dict(os.environ)
+    env["PYTHONPATH"] = f"src{os.pathsep}" + env.get("PYTHONPATH", "")
+    blocks = bash_blocks((ROOT / RUN_FILE).read_text())
+    print(f"[docs] {RUN_FILE}: {len(blocks)} bash block(s) to execute")
+    for lineno, script in blocks:
+        head = script.strip().splitlines()[0] if script.strip() else "<empty>"
+        print(f"[docs] {RUN_FILE}:{lineno}: $ {head}")
+        t0 = time.time()
+        proc = subprocess.run(["bash", "-euo", "pipefail", "-c", script],
+                              cwd=ROOT, env=env)
+        status = "ok" if proc.returncode == 0 else f"FAILED ({proc.returncode})"
+        print(f"[docs]   -> {status} in {time.time()-t0:.1f}s")
+        if proc.returncode != 0:
+            errors.append(f"{RUN_FILE}:{lineno}: block failed "
+                          f"(exit {proc.returncode}): {head}")
+    return errors
+
+
+def main() -> int:
+    errors = check_links()
+    for e in errors:
+        print(f"[docs] {e}", file=sys.stderr)
+    if "--links-only" not in sys.argv:
+        errors += run_blocks()
+    if errors:
+        print(f"[docs] {len(errors)} problem(s)", file=sys.stderr)
+        return 1
+    print("[docs] all links resolve and all README bash blocks ran green")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -15,6 +15,11 @@
 #   tools/ci.sh --policy       CommPolicy suite with 4 forced host devices
 #                              (runs the shard_map Uniform-parity check
 #                              in-process instead of skipping it)
+#   tools/ci.sh --docs         documentation lane: markdown link check over
+#                              README/DESIGN/CHANGES + execution of every
+#                              README ```bash block (quickstart, scenario
+#                              smoke, fast verify) via tools/check_docs.py.
+#                              `--docs --links-only` skips the executions.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -33,6 +38,10 @@ case "${1:-}" in
   --bench-smoke)
     shift
     exec python -m benchmarks.bench_halo --smoke "$@"
+    ;;
+  --docs)
+    shift
+    exec python tools/check_docs.py "$@"
     ;;
 esac
 exec python -m pytest -x -q "$@"
