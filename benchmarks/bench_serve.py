@@ -1,0 +1,121 @@
+"""Serving benchmark: quantized inference engine + load-tested request path.
+
+Tracks the serving trajectory of the system by writing ``BENCH_serve.json`` at
+the repo root. On the ``yelp_like@small`` workload (the benchmark reference
+graph), measures:
+
+* **refresh wire bytes** — what one cache refresh ships, for a 32-bit full
+  sweep, a 1-bit full sweep, and a 1-bit k-hop delta refresh of a small
+  changed-feature batch (exact accounting, ``repro.serve.delta``). The
+  acceptance gate asserts the quantized delta path ships **<= 10%** of the
+  full-sweep 32-bit bytes — the reason a serving tier built on this stack can
+  absorb continuous feature updates;
+* **request path** — closed-loop load (seeded clients x batches of node-id
+  queries through the microbatching admission-queue server): QPS, p50/p99 ms;
+* **sweep latency** — wall time of the full cache sweep per bit-width
+  (XLA-CPU numbers; see DESIGN.md §8 for the measurement caveat).
+
+``--smoke`` shrinks the workload/tier so CI can run it in seconds (writes the
+untracked ``BENCH_serve.smoke.json``; only full runs update the tracked
+record).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro import datasets
+from repro.models.gnn.models import PAPER_ARCHS
+from repro.serve import EmbeddingServer, InferenceEngine, ServeConfig
+from repro.serve.loadgen import closed_loop
+from repro.train import checkpoint as ckpt
+from repro.train.trainer import GNNTrainer
+from repro.core.sylvie import SylvieConfig
+
+ROOT = Path(__file__).resolve().parents[1]
+DELTA_BYTE_GATE = 0.10     # delta refresh vs full 32-bit sweep
+
+
+def run(smoke: bool = False) -> dict:
+    ref, parts, epochs, requests = ("yelp_like@smoke", 4, 3, 60) if smoke \
+        else ("yelp_like@small", 4, 5, 300)
+    seed = 0
+    pg, _ = datasets.load_partitioned(ref, parts, seed=seed)
+    n_nodes = int(pg.part_of.shape[0])
+    model = PAPER_ARCHS["gcn"](pg.x.shape[-1], pg.n_classes)
+    changed = max(1, n_nodes // 100)       # ~1% of nodes change per refresh
+
+    with tempfile.TemporaryDirectory() as td:
+        tr = GNNTrainer(model, pg, SylvieConfig(mode="sync", bits=1),
+                        seed=seed, ckpt_dir=td)
+        tr.fit(epochs)
+        tr.save()
+        test_acc = tr.evaluate("test")
+
+        rng = np.random.default_rng(seed + 1)
+        ids = rng.choice(n_nodes, size=changed, replace=False)
+        rows = rng.normal(0, 1, (changed, pg.x.shape[-1])).astype(np.float32)
+
+        rows_out = {}
+        for name, bits, delta in (("full_32bit", 32, False),
+                                  ("full_1bit", 1, False),
+                                  ("delta_1bit", 1, True)):
+            engine, _ = InferenceEngine.from_checkpoint(
+                td, model, pg, config=ServeConfig(bits=bits), seed=seed)
+            t0 = time.perf_counter()
+            engine.full_sweep()
+            sweep_s = time.perf_counter() - t0
+            rep = engine.refresh(ids, rows, full=not delta)
+            rows_out[name] = dict(
+                bits=bits, refresh=("delta" if delta else "full"),
+                changed_nodes=int(rep.changed),
+                affected_rows=list(rep.affected_rows),
+                refresh_payload_bytes=rep.payload_bytes,
+                refresh_ec_bytes=rep.ec_bytes,
+                refresh_meta_bytes=rep.meta_bytes,
+                refresh_wire_bytes=rep.wire_bytes,
+                sweep_seconds=sweep_s)
+            if name == "full_1bit":
+                load_engine = engine       # serve the quantized engine
+
+        load = closed_loop(EmbeddingServer(load_engine, microbatch=128),
+                           n_nodes, clients=8, batch=16, requests=requests,
+                           seed=seed)
+
+    ratio = rows_out["delta_1bit"]["refresh_wire_bytes"] \
+        / max(rows_out["full_32bit"]["refresh_wire_bytes"], 1)
+    rec = dict(
+        config=dict(graph=ref, parts=parts, arch="gcn",
+                    train_epochs=epochs, changed_nodes=changed,
+                    smoke=smoke, test_acc=float(test_acc)),
+        refresh=rows_out,
+        load=load,
+        delta_vs_full32_bytes=ratio,
+    )
+
+    print(f"== bench_serve ({ref}, P={parts}, {changed} changed nodes) ==")
+    for name, r in rows_out.items():
+        print(f"{name:11s} refresh {r['refresh_wire_bytes']/1e3:9.2f} kB "
+              f"(rows {r['affected_rows']}) sweep {r['sweep_seconds']*1e3:7.1f} ms")
+    print(f"load: {load['qps']:.0f} qps  p50 {load['p50_ms']:.3f} ms  "
+          f"p99 {load['p99_ms']:.3f} ms")
+    print(f"delta/full32 bytes: {ratio:.4f} (gate <= {DELTA_BYTE_GATE})")
+
+    out = ROOT / ("BENCH_serve.smoke.json" if smoke else "BENCH_serve.json")
+    out.write_text(json.dumps(rec, indent=1, default=float))
+    assert ratio <= DELTA_BYTE_GATE, \
+        f"delta refresh regressed: {ratio:.4f} of full 32-bit bytes " \
+        f"> {DELTA_BYTE_GATE}"
+    return rec
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny workload (CI freshness check)")
+    run(**vars(ap.parse_args()))

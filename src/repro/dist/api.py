@@ -114,6 +114,21 @@ def shard_gnn_steps(train_sync, train_async, eval_step, mesh, state, block):
     return ts, ta, ev
 
 
+def shard_serve_fn(sweep_fn, mesh):
+    """Wrap the serving sweep (see ``repro.serve.engine``) in
+    ``jit(shard_map(...))``. Signature contract:
+    ``sweep_fn(params, block, x, halo_caches, send_masks, key) ->
+    (logits, layer_inputs, halo_caches)`` — params/key replicated, everything
+    else stacked on the leading partition axis (the specs are pytree
+    prefixes, so the halo-cache / mask / layer tuples need no per-leaf
+    spelling)."""
+    axes = flat_axes(mesh)
+    backend = ShardMapBackend(mesh)
+    sh, rep = P(axes), P()
+    return backend.shard(sweep_fn, in_specs=(rep, sh, sh, sh, sh, rep),
+                         out_specs=(sh, sh, sh))
+
+
 def device_put_gnn(mesh, state, block, arrays=()):
     """Place (state, block, *arrays) onto ``mesh`` under the GNN sharding
     contract. ``arrays`` are per-node stacked arrays (x, y, masks, ...).

@@ -97,3 +97,27 @@ class Runtime:
         if not self.is_sharded:
             return state, block, tuple(arrays)
         return api.device_put_gnn(self.mesh, state, block, arrays)
+
+    # -- serving (repro.serve) ----------------------------------------------
+    def shard_serve_fn(self, sweep_fn):
+        """Compile the inference-engine sweep for this runtime (plain jit in
+        the simulated stack; ``jit(shard_map(...))`` on a mesh)."""
+        if not self.is_sharded:
+            return jax.jit(sweep_fn)
+        return api.shard_serve_fn(sweep_fn, self.mesh)
+
+    def device_put_stacked(self, tree):
+        """Place a stacked ``(P, ...)`` pytree under this runtime (one
+        partition per device when sharded; identity otherwise)."""
+        if not self.is_sharded:
+            return tree
+        from jax.sharding import PartitionSpec
+        return self.backend.device_put(
+            tree, PartitionSpec(api.flat_axes(self.mesh)))
+
+    def device_put_replicated(self, tree):
+        """Replicate a pytree across this runtime's devices."""
+        if not self.is_sharded:
+            return tree
+        from jax.sharding import PartitionSpec
+        return self.backend.device_put(tree, PartitionSpec())

@@ -272,6 +272,100 @@ def partition_graph(g: Graph, n_parts: int, method: str = "block",
 
 
 # ---------------------------------------------------------------------------
+# Halo-structure introspection: which *global* node each halo-buffer row
+# carries, and the k-hop frontier of a seed set. Host-side (numpy), built
+# entirely from the partition plan — the serving-time delta refresh
+# (repro.serve.delta) plans its per-layer affected sets with these.
+# ---------------------------------------------------------------------------
+def halo_source_globals(pg: PartitionedGraph) -> np.ndarray:
+    """(P, halo_rows) global node id carried by each halo-buffer row of each
+    partition (-1 for padding rows). Inverts the exchange: row ``r`` of
+    partition ``p``'s *receive* buffer holds the node partition ``q`` gathered
+    at the matching slot of its *send* buffer (``q = (p-k) % P`` for compact
+    ring bucket ``k``; the block sender for dense)."""
+    plan = pg.plan
+    n_parts = plan.n_parts
+    out = np.full((n_parts, plan.halo_rows), -1, dtype=np.int64)
+    if plan.layout == "compact":
+        bstart = np.zeros(n_parts + 1, dtype=np.int64)
+        np.cumsum(plan.bucket_sizes, out=bstart[1:])
+        for p in range(n_parts):
+            for k in range(1, n_parts):
+                if plan.bucket_sizes[k] == 0:
+                    continue
+                q = (p - k) % n_parts
+                sl = slice(bstart[k], bstart[k + 1])
+                idx, m = plan.send_idx[q, sl], plan.send_mask[q, sl]
+                row = out[p, sl]
+                row[m] = pg.global_ids[q, idx[m]]
+    else:
+        for p in range(n_parts):
+            for q in range(n_parts):
+                sl = slice(q * plan.h_pad, (q + 1) * plan.h_pad)
+                idx, m = plan.send_idx[q, p], plan.send_mask[q, p]
+                row = out[p, sl]
+                row[m] = pg.global_ids[q, idx[m]]
+    return out
+
+
+def global_edges(pg: PartitionedGraph) -> tuple[np.ndarray, np.ndarray]:
+    """(src_global, dst_global) of every real (unmasked) edge, reconstructed
+    from the per-partition extended-index edge lists. Local extended indices
+    resolve through ``global_ids``; halo indices through
+    :func:`halo_source_globals`."""
+    plan = pg.plan
+    halo_src = halo_source_globals(pg)
+    srcs, dsts = [], []
+    for p in range(plan.n_parts):
+        m = pg.edge_mask[p]
+        se = pg.edges[p, m, 0].astype(np.int64)
+        dl = pg.edges[p, m, 1].astype(np.int64)
+        local = se < plan.n_local
+        sg = np.where(local,
+                      pg.global_ids[p, np.where(local, se, 0)],
+                      halo_src[p, np.where(local, 0, se - plan.n_local)])
+        srcs.append(sg)
+        dsts.append(pg.global_ids[p, dl])
+    src_g = np.concatenate(srcs) if srcs else np.zeros(0, np.int64)
+    dst_g = np.concatenate(dsts) if dsts else np.zeros(0, np.int64)
+    assert (src_g >= 0).all() and (dst_g >= 0).all(), \
+        "edge list references a padding halo row"
+    return src_g, dst_g
+
+
+def khop_frontier(pg: PartitionedGraph, seed_nodes, k: int,
+                  edges: Optional[tuple[np.ndarray, np.ndarray]] = None
+                  ) -> np.ndarray:
+    """(k+1, N) bool: ``out[h]`` marks the global nodes reachable from
+    ``seed_nodes`` within ``h`` *directed* hops (message direction src -> dst;
+    ``out[0]`` is the seed set itself, each row a superset of the previous).
+
+    This is the incremental-refresh frontier: when the features of
+    ``seed_nodes`` change, the layer-``h`` input embeddings of exactly the
+    nodes in ``out[h]`` can change (each GNN layer pulls one hop), so a
+    serving-time delta refresh only needs to re-ship layer ``h``'s boundary
+    rows inside ``out[h]`` (see ``repro.serve.delta``).
+
+    ``edges`` optionally supplies a precomputed :func:`global_edges` pair —
+    callers planning many refreshes over one immutable partition (the
+    inference engine) amortize the O(E) reconstruction that way."""
+    n = int(pg.part_of.shape[0])
+    seeds = np.asarray(seed_nodes, dtype=np.int64).reshape(-1)
+    if seeds.size and (seeds.min() < 0 or seeds.max() >= n):
+        raise ValueError(f"seed node ids must be in [0, {n})")
+    out = np.zeros((k + 1, n), dtype=bool)
+    out[0, seeds] = True
+    if k == 0:
+        return out
+    src_g, dst_g = global_edges(pg) if edges is None else edges
+    for h in range(k):
+        nxt = out[h].copy()
+        nxt[dst_g[out[h][src_g]]] = True
+        out[h + 1] = nxt
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Analytic plan *shapes* for the full-config dry-run (no 62M-edge graph is
 # materialized; .lower() only needs ShapeDtypeStructs). Used by
 # launch/dryrun.py; the sharding contract is DESIGN.md §5.

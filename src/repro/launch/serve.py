@@ -1,0 +1,279 @@
+"""GNN serving launcher: train -> checkpoint -> quantized inference engine ->
+load-tested request path, in one command.
+
+Default flow (``python -m repro.launch.serve --graph yelp_like@small``):
+
+1. load the named workload + cached partition plan (``repro.datasets``);
+2. restore the checkpoint under ``--ckpt-dir`` — or, when none exists, train
+   ``--train-epochs`` epochs with the Sylvie trainer and save one (the
+   train -> save -> serve handoff the checkpoint format-version guards);
+3. build an :class:`~repro.serve.engine.InferenceEngine` at ``--bits``, run
+   the full cache sweep, then drive the closed-loop load generator
+   (``--clients`` x ``--requests`` seeded queries of ``--batch`` node ids,
+   with a k-hop delta refresh of ``--refresh-nodes`` nodes interleaved every
+   ``--refresh-every`` completions);
+4. print + write the serving report JSON (QPS, p50/p99 ms, exact refresh
+   wire bytes, delta-vs-full byte ratio) under ``artifacts/serve/``.
+
+``--matrix NAME`` instead runs a serving scenario matrix — bits x refresh
+mode cells over one workload, one report JSON per cell plus a summary, under
+``artifacts/scenarios/serve_<NAME>/`` (the serving counterpart of
+``launch/scenarios.py``).
+
+Examples::
+
+    python -m repro.launch.serve --graph yelp_like@small
+    python -m repro.launch.serve --graph yelp_like@small --bits 32 --requests 500
+    python -m repro.launch.serve --matrix smoke
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
+        python -m repro.launch.serve --graph yelp_like@smoke --runtime sharded
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import itertools
+import json
+import time
+from pathlib import Path
+from typing import Optional
+
+import numpy as np
+
+
+def _root() -> Path:
+    return Path(__file__).resolve().parents[3]
+
+
+def _load(ref: str, parts: int, seed: int):
+    from .. import datasets
+    from ..models.gnn.models import PAPER_ARCHS
+    pg, _ = datasets.load_partitioned(ref, parts, seed=seed)
+    return pg, PAPER_ARCHS
+
+
+def _ensure_checkpoint(ckpt_dir: Path, model, pg, *, train_epochs: int,
+                       train_bits: int, seed: int) -> bool:
+    """Train + save a checkpoint unless one already exists. Returns True when
+    training ran."""
+    from ..core.sylvie import SylvieConfig
+    from ..train import checkpoint as ckpt
+    from ..train.trainer import GNNTrainer
+    if ckpt.latest_step(ckpt_dir) is not None:
+        return False
+    tr = GNNTrainer(model, pg, SylvieConfig(mode="sync", bits=train_bits),
+                    seed=seed, ckpt_dir=str(ckpt_dir))
+    tr.fit(train_epochs)
+    tr.save()
+    return True
+
+
+def serve_once(args) -> dict:
+    """The CLI's single-cell flow; returns the serving report dict."""
+    from ..dist.runtime import Runtime
+    from ..serve import EmbeddingServer, InferenceEngine, ServeConfig
+    from ..serve.loadgen import closed_loop
+
+    pg, archs = _load(args.graph, args.parts, args.seed)
+    model = archs[args.arch](pg.x.shape[-1], pg.n_classes)
+    ref_safe = args.graph.replace("@", "-")
+    ckpt_dir = Path(args.ckpt_dir) if args.ckpt_dir else \
+        _root() / "artifacts" / "serve" / f"{args.arch}-{ref_safe}-ckpt"
+    trained = _ensure_checkpoint(ckpt_dir, model, pg,
+                                 train_epochs=args.train_epochs,
+                                 train_bits=args.train_bits, seed=args.seed)
+    runtime = Runtime.sharded(args.parts) if args.runtime == "sharded" \
+        else Runtime.simulated(args.parts)
+    cfg = ServeConfig(bits=args.bits, max_staleness=args.max_staleness)
+    engine, meta = InferenceEngine.from_checkpoint(
+        ckpt_dir, model, pg, config=cfg, runtime=runtime, seed=args.seed)
+    sweep = engine.full_sweep()
+    n_nodes = int(pg.part_of.shape[0])
+
+    server = EmbeddingServer(engine, microbatch=args.microbatch,
+                             max_queue=args.max_queue)
+    load = closed_loop(server, n_nodes, clients=args.clients,
+                       batch=args.batch, requests=args.requests,
+                       seed=args.seed, refresh_every=args.refresh_every,
+                       refresh_nodes=args.refresh_nodes)
+
+    # one measured delta refresh for the byte comparison; the interleaved
+    # load-phase refreshes may have run the staleness clock up to the bound,
+    # so reset it first or the measurement could silently be a forced full
+    engine.full_sweep()
+    rng = np.random.default_rng(args.seed + 1)
+    ids = rng.choice(n_nodes, size=max(1, args.refresh_nodes), replace=False)
+    rows = rng.normal(0, 1, (ids.size, pg.x.shape[-1])).astype(np.float32)
+    delta = engine.refresh(ids, rows)
+
+    report = {
+        "graph": args.graph, "arch": args.arch, "n_parts": args.parts,
+        "bits": args.bits, "runtime": args.runtime, "seed": args.seed,
+        "checkpoint": dict(dir=str(ckpt_dir), trained_now=trained, **meta),
+        "sweep_seconds": sweep.seconds,
+        "full_sweep_wire_bytes": engine.full_sweep_wire_bytes(),
+        "load": load,
+        "delta_refresh": dict(kind=delta.kind, changed=delta.changed,
+                              affected_rows=list(delta.affected_rows),
+                              wire_bytes=delta.wire_bytes,
+                              seconds=delta.seconds),
+        "delta_vs_full_bytes": delta.wire_bytes
+        / max(engine.full_sweep_wire_bytes(), 1),
+    }
+    print(f"== serve {args.arch} on {args.graph} (P={args.parts}, "
+          f"{args.bits}-bit, {args.runtime}) ==")
+    print(f"checkpoint: {'trained now' if trained else 'restored'} "
+          f"(epoch {meta.get('epoch', '?')}, format v"
+          f"{meta.get('format_version')})")
+    print(f"sweep {sweep.seconds*1e3:.1f} ms, full refresh "
+          f"{report['full_sweep_wire_bytes']/1e3:.1f} kB")
+    print(f"load: {load['qps']:.0f} qps  p50 {load['p50_ms']:.3f} ms  "
+          f"p99 {load['p99_ms']:.3f} ms  ({load['requests']} requests, "
+          f"{load['rejected']} rejected)")
+    print(f"delta refresh ({delta.changed} nodes): "
+          f"{delta.wire_bytes/1e3:.2f} kB = "
+          f"{100*report['delta_vs_full_bytes']:.1f}% of a full sweep")
+    return report
+
+
+# ---------------------------------------------------------------------------
+# serving scenario matrix (bits x refresh cells over one workload)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ServeMatrix:
+    """A serving sweep: every ``bits`` width x refresh mode on one workload,
+    all cells sharing one trained checkpoint."""
+
+    name: str
+    dataset: str
+    bits: tuple[int, ...] = (32, 1)
+    refreshes: tuple[str, ...] = ("full", "delta")
+    parts: int = 4
+    train_epochs: int = 3
+    requests: int = 80
+    clients: int = 4
+    batch: int = 16
+    refresh_nodes: int = 8
+    seed: int = 0
+
+    def cells(self):
+        return tuple(itertools.product(self.bits, self.refreshes))
+
+
+SERVE_MATRICES: dict[str, ServeMatrix] = {
+    "smoke": ServeMatrix(name="smoke", dataset="yelp_like@smoke"),
+    "small": ServeMatrix(name="small", dataset="yelp_like@small",
+                         train_epochs=5, requests=200, refresh_nodes=12),
+}
+
+
+def run_serve_matrix(name: str, out_dir: Optional[Path] = None) -> list[dict]:
+    """Run every cell of a named serving matrix; one JSON per cell plus
+    ``summary.json`` under ``artifacts/scenarios/serve_<name>/``."""
+    from ..dist.runtime import Runtime
+    from ..serve import EmbeddingServer, InferenceEngine, ServeConfig
+    from ..serve.loadgen import closed_loop
+
+    if name not in SERVE_MATRICES:
+        raise KeyError(f"unknown serve matrix {name!r}; "
+                       f"known: {sorted(SERVE_MATRICES)}")
+    m = SERVE_MATRICES[name]
+    out = (Path(out_dir) if out_dir is not None
+           else _root() / "artifacts" / "scenarios") / f"serve_{m.name}"
+    out.mkdir(parents=True, exist_ok=True)
+    pg, archs = _load(m.dataset, m.parts, m.seed)
+    model = archs["gcn"](pg.x.shape[-1], pg.n_classes)
+    ref_safe = m.dataset.replace("@", "-")
+    ckpt_dir = _root() / "artifacts" / "serve" / f"gcn-{ref_safe}-ckpt"
+    _ensure_checkpoint(ckpt_dir, model, pg, train_epochs=m.train_epochs,
+                       train_bits=1, seed=m.seed)
+    n_nodes = int(pg.part_of.shape[0])
+    rng = np.random.default_rng(m.seed + 1)
+    ids = rng.choice(n_nodes, size=m.refresh_nodes, replace=False)
+    rows = rng.normal(0, 1, (ids.size, pg.x.shape[-1])).astype(np.float32)
+
+    reports = []
+    for bits, refresh in m.cells():
+        cell_id = f"gcn__{m.dataset}__bits{bits}__{refresh}"
+        engine, meta = InferenceEngine.from_checkpoint(
+            ckpt_dir, model, pg, runtime=Runtime.simulated(m.parts),
+            config=ServeConfig(bits=bits), seed=m.seed)
+        engine.full_sweep()
+        t0 = time.time()
+        load = closed_loop(EmbeddingServer(engine), n_nodes,
+                           clients=m.clients, batch=m.batch,
+                           requests=m.requests, seed=m.seed)
+        rep = engine.refresh(ids, rows, full=(refresh == "full"))
+        r = {
+            "matrix": f"serve_{m.name}", "cell": cell_id,
+            "dataset": m.dataset, "bits": bits, "refresh": refresh,
+            "n_parts": m.parts, "seed": m.seed,
+            "checkpoint_step": meta.get("step"),
+            "refresh_wire_bytes": rep.wire_bytes,
+            "refresh_affected_rows": list(rep.affected_rows),
+            "full_sweep_wire_bytes": engine.full_sweep_wire_bytes(),
+            "load": load, "seconds": time.time() - t0,
+        }
+        (out / f"{cell_id}.json").write_text(
+            json.dumps(r, indent=1, default=float))
+        print(f"[serve:{m.name}] {cell_id}: {load['qps']:.0f} qps, refresh "
+              f"{rep.wire_bytes/1e3:.2f} kB")
+        reports.append(r)
+    summary = {"matrix": f"serve_{m.name}", "dataset": m.dataset,
+               "cells": [r["cell"] for r in reports],
+               "qps": {r["cell"]: r["load"]["qps"] for r in reports},
+               "refresh_wire_bytes": {r["cell"]: r["refresh_wire_bytes"]
+                                      for r in reports}}
+    (out / "summary.json").write_text(json.dumps(summary, indent=1,
+                                                 default=float))
+    return reports
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="quantized full-graph GNN serving (repro.serve)")
+    ap.add_argument("--graph", default="yelp_like@small",
+                    help="named-workload ref, 'name@tier' "
+                         "(see repro.datasets.names())")
+    ap.add_argument("--arch", default="gcn",
+                    choices=["gcn", "graphsage", "gat"])
+    ap.add_argument("--parts", type=int, default=4)
+    ap.add_argument("--bits", type=int, default=1,
+                    help="serving halo bit-width (32 = full precision)")
+    ap.add_argument("--runtime", default="simulated",
+                    choices=["simulated", "sharded"])
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="restore from here; trains + saves when empty "
+                         "(default artifacts/serve/<arch>-<graph>-ckpt)")
+    ap.add_argument("--train-epochs", type=int, default=5)
+    ap.add_argument("--train-bits", type=int, default=1)
+    ap.add_argument("--max-staleness", type=int, default=8)
+    ap.add_argument("--microbatch", type=int, default=128)
+    ap.add_argument("--max-queue", type=int, default=1024)
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=200)
+    ap.add_argument("--refresh-every", type=int, default=None,
+                    help="interleave a delta refresh every N completions")
+    ap.add_argument("--refresh-nodes", type=int, default=8)
+    ap.add_argument("--matrix", default=None,
+                    help="run a named serving matrix instead "
+                         f"({sorted(SERVE_MATRICES)})")
+    ap.add_argument("--out", default=None, help="report JSON path override")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.matrix:
+        run_serve_matrix(args.matrix)
+        return
+    report = serve_once(args)
+    ref_safe = args.graph.replace("@", "-")
+    out = Path(args.out) if args.out else \
+        _root() / "artifacts" / "serve" / f"{args.arch}-{ref_safe}.json"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(report, indent=1, default=float))
+    print(f"report -> {out}")
+
+
+if __name__ == "__main__":
+    main()

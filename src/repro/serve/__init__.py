@@ -1,0 +1,37 @@
+"""repro.serve — quantized full-graph inference with incremental refresh.
+
+The serving-time counterpart of the Sylvie training stack (DESIGN.md §10):
+
+* :class:`~repro.serve.engine.InferenceEngine` — restores a trained
+  checkpoint and materializes per-layer embedding caches through the same
+  quantized-halo machinery training uses; node queries are O(lookup);
+* :mod:`~repro.serve.delta` — incremental k-hop delta refresh planning +
+  exact wire accounting, with a staleness bound forcing periodic full sweeps;
+* :class:`~repro.serve.server.EmbeddingServer` — microbatched,
+  admission-controlled in-process request path;
+* :mod:`~repro.serve.loadgen` — seeded closed-loop load generator
+  (QPS / p50 / p99 / refresh bytes).
+
+::
+
+    from repro.serve import InferenceEngine, ServeConfig, EmbeddingServer
+    from repro.serve.loadgen import closed_loop
+
+    eng, meta = InferenceEngine.from_checkpoint(ckpt_dir, model, pg,
+                                                config=ServeConfig(bits=1))
+    eng.full_sweep()
+    report = closed_loop(EmbeddingServer(eng), n_nodes=pg.part_of.size)
+"""
+from __future__ import annotations
+
+from . import delta, loadgen  # noqa: F401
+from .delta import RefreshPlan, RefreshReport  # noqa: F401
+from .engine import InferenceEngine, QueryResult, ServeComm, ServeConfig  # noqa: F401
+from .loadgen import closed_loop  # noqa: F401
+from .server import EmbeddingServer, Request, Response  # noqa: F401
+
+__all__ = [
+    "InferenceEngine", "ServeConfig", "ServeComm", "QueryResult",
+    "RefreshPlan", "RefreshReport", "EmbeddingServer", "Request", "Response",
+    "closed_loop", "delta", "loadgen",
+]

@@ -1,0 +1,163 @@
+"""Incremental k-hop delta refresh: host-side planning + wire accounting.
+
+The serving insight mirrors training: the layer-wise halo exchange is the
+bottleneck of the partitioned forward pass, so a feature update should ship as
+little boundary data as possible. When the features of a batch of nodes
+change, the layer-``h`` input embeddings that can change are exactly the nodes
+within ``h`` directed hops of the changed set (each GNN layer pulls one hop) —
+:func:`repro.graph.partition.khop_frontier`. A delta refresh therefore:
+
+1. computes the frontier once per refresh (host-side, from the partition
+   plan's boundary structure — no device work);
+2. re-ships, at each exchange site ``i``, only the boundary rows whose owner
+   node lies inside ``frontier[i]`` (the :class:`RefreshPlan` send masks);
+   every other halo row is consumed from the engine's per-layer cache;
+3. under deterministic rounding the cached rows are bit-identical to what a
+   fresh exchange would deliver (unaffected owner => unchanged embedding =>
+   identical quantization), so a delta refresh equals a full sweep *exactly*
+   (tested) while shipping a fraction of the bytes.
+
+Wire accounting is exact, not estimated: per site we count the quantized
+payload + error-compensation bytes of the affected *real* rows (the same
+:func:`repro.core.quantization.comm_bytes` rule Table 3 uses) plus a
+1-bit-per-real-row bitmap per site — the metadata a ragged delta send needs so
+the receiver knows which cached rows to overwrite.
+
+Staleness bound (the serving analogue of the Bounded Staleness Adaptor §3.3):
+the engine forces a full sweep after ``max_staleness`` consecutive delta
+refreshes. Under deterministic rounding deltas are exact and the bound is
+belt-and-braces; under stochastic serving (or future lossy deltas) it caps how
+long any cached row can drift without a ground-truth refresh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from ..core.quantization import comm_bytes
+from ..graph.partition import PartitionedGraph, global_edges, khop_frontier
+from ..policy.base import EpochDecision
+
+
+@dataclasses.dataclass(frozen=True)
+class RefreshPlan:
+    """One refresh's communication schedule: which send-buffer rows each
+    exchange site must re-ship. ``send_affected[i]`` is a (P, rows) bool mask
+    over the site-``i`` send buffer (always a subset of the plan's
+    ``send_mask``); ``affected_rows[i]`` its true row count totaled across
+    partitions; ``changed`` the seed-set size. ``full`` plans re-ship every
+    real row (a full sweep is the degenerate RefreshPlan)."""
+
+    send_affected: tuple[np.ndarray, ...]
+    affected_rows: tuple[int, ...]
+    changed: int
+    full: bool
+
+    def device_masks(self) -> tuple[np.ndarray, ...]:
+        """float32 masks for the traced sweep (data, not trace constants — one
+        executable serves every refresh)."""
+        return tuple(m.astype(np.float32) for m in self.send_affected)
+
+
+def _send_globals(pg: PartitionedGraph) -> np.ndarray:
+    """(P, rows) global node id owning each send-buffer row (-1 padding)."""
+    plan = pg.plan
+    idx = plan.send_idx.reshape(plan.n_parts, -1).astype(np.int64)
+    mask = plan.send_mask.reshape(plan.n_parts, -1)
+    rows = np.take_along_axis(pg.global_ids, idx, axis=1)
+    return np.where(mask, rows, -1)
+
+
+@dataclasses.dataclass(frozen=True)
+class FrontierIndex:
+    """Precomputed refresh-planning state for one immutable partition.
+
+    Building the frontier needs the global edge list and the send-row
+    ownership map — both O(E)/O(rows) reconstructions from the plan that
+    never change between refreshes. The engine builds one index at
+    construction; each ``plan_refresh`` is then O(frontier), not O(graph)."""
+
+    pg: PartitionedGraph
+    edges: tuple[np.ndarray, np.ndarray]     # global_edges(pg)
+    send_globals: np.ndarray                 # (P, rows), -1 padding
+    base_mask: np.ndarray                    # (P, rows) = plan.send_mask
+
+    @staticmethod
+    def build(pg: PartitionedGraph) -> "FrontierIndex":
+        return FrontierIndex(
+            pg=pg, edges=global_edges(pg), send_globals=_send_globals(pg),
+            base_mask=pg.plan.send_mask.reshape(pg.plan.n_parts, -1))
+
+    def plan_refresh(self, changed_global_ids, n_sites: int) -> RefreshPlan:
+        """Delta plan for a changed-feature batch: site ``i`` re-ships the
+        boundary rows owned by nodes within ``i`` hops of the changed set."""
+        changed = np.asarray(changed_global_ids, dtype=np.int64).reshape(-1)
+        # site i consumes the i-hop frontier; the logits frontier (n_sites
+        # hops) is never shipped, so k = n_sites - 1 suffices for the masks
+        frontier = khop_frontier(self.pg, changed, max(n_sites - 1, 0),
+                                 edges=self.edges)
+        sg = np.clip(self.send_globals, 0, None)
+        masks, rows = [], []
+        for i in range(n_sites):
+            aff = self.base_mask & frontier[min(i, frontier.shape[0] - 1)][sg]
+            masks.append(aff)
+            rows.append(int(aff.sum()))
+        return RefreshPlan(send_affected=tuple(masks),
+                           affected_rows=tuple(rows),
+                           changed=int(changed.size), full=False)
+
+
+def plan_full(pg: PartitionedGraph, n_sites: int) -> RefreshPlan:
+    """The full-sweep plan (no index needed — every real row ships)."""
+    mask = pg.plan.send_mask.reshape(pg.plan.n_parts, -1)
+    rows = int(mask.sum())
+    return RefreshPlan(send_affected=(mask,) * n_sites,
+                       affected_rows=(rows,) * n_sites,
+                       changed=0, full=True)
+
+
+def plan_refresh(pg: PartitionedGraph, changed_global_ids,
+                 n_sites: int) -> RefreshPlan:
+    """One-shot convenience over :meth:`FrontierIndex.plan_refresh` (builds
+    the O(E) index each call — hold a :class:`FrontierIndex` when planning
+    repeatedly, as the engine does)."""
+    return FrontierIndex.build(pg).plan_refresh(changed_global_ids, n_sites)
+
+
+@dataclasses.dataclass(frozen=True)
+class RefreshReport:
+    """What one refresh (full sweep or delta) cost on the wire."""
+
+    kind: str                       # "full" | "delta"
+    forced: bool                    # delta request escalated by the bound
+    changed: int                    # seed nodes whose features changed
+    affected_rows: tuple[int, ...]  # real rows shipped per site
+    payload_bytes: int
+    ec_bytes: int                   # error-compensation (scale/zero)
+    meta_bytes: int                 # delta bitmap (which cached rows refresh)
+    seconds: float = 0.0
+
+    @property
+    def wire_bytes(self) -> int:
+        return self.payload_bytes + self.ec_bytes + self.meta_bytes
+
+
+def refresh_wire_bytes(plan_real_rows: int, site_dims, decision: EpochDecision,
+                       refresh: RefreshPlan, scale_dtype) -> tuple[int, int, int]:
+    """(payload, ec, meta) exact wire bytes of one refresh under ``decision``.
+
+    Payload/ec follow the Table-3 rule per site (affected real rows only,
+    forward direction — serving has no backward pass). Delta refreshes add one
+    bitmap of ``plan_real_rows`` bits per site; full sweeps need none (the
+    receiver overwrites everything)."""
+    payload = ec = 0
+    for i, d in enumerate(site_dims):
+        pb, eb = comm_bytes(refresh.affected_rows[i], int(d),
+                            decision.sites[i].fwd_bits, scale_dtype)
+        payload += pb
+        ec += eb
+    meta = 0 if refresh.full else len(tuple(site_dims)) * \
+        math.ceil(plan_real_rows / 8)
+    return payload, ec, meta

@@ -1,0 +1,332 @@
+"""Partitioned full-graph inference engine with per-layer embedding caches.
+
+``InferenceEngine`` restores a trained checkpoint (or takes params directly)
+and serves node queries off materialized caches:
+
+* **one sweep executable** runs the model forward through the existing
+  ``HaloBackend``/``SylvieComm`` quantized-halo machinery (simulated stack or
+  shard_map — fixed by a :class:`~repro.dist.runtime.Runtime`, exactly like
+  training). Per-site bit-widths come from an
+  :class:`~repro.policy.base.EpochDecision` on the same lattice the training
+  policies use;
+* a **full sweep** and an incremental **delta refresh** are the *same traced
+  function*: the sweep takes per-site "affected" send masks as data and blends
+  freshly exchanged halo rows with the cached ones
+  (``where(affected, fresh, cached)``). A full sweep is the all-rows mask; a
+  delta refresh ships only the k-hop frontier of the changed nodes
+  (``repro.serve.delta``). One executable means delta == full is a structural
+  guarantee, not a numerical accident;
+* after a sweep the engine holds, per exchange site, the embedding entering
+  that site (``(P, n_local, d_i)``) and its dequantized halo buffer, plus the
+  final logits — **node queries are O(lookup)**: global id -> (partition,
+  slot) -> cached row, no graph compute on the request path.
+
+Staleness bound: ``ServeConfig.max_staleness`` caps consecutive delta
+refreshes; the next ``refresh()`` past the bound escalates to a forced full
+sweep (the serving analogue of the Bounded Staleness Adaptor — see
+``delta.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import quantization as qlib
+from ..core.exchange import exchange_halo, exchange_quantized_halo, \
+    gather_boundary
+from ..core.staleness import HaloState
+from ..core.sylvie import SylvieComm, SylvieConfig
+from ..dist.runtime import Runtime
+from ..graph.partition import PartitionedGraph
+from ..models.gnn import blocks as B
+from ..policy.base import EpochDecision, validate_decision
+from ..train import checkpoint as ckpt
+from . import delta as deltalib
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Serving-time communication + refresh policy.
+
+    ``bits`` quantizes every halo exchange of the serving forward pass
+    (32 = full precision; per-site widths via an explicit ``decision``).
+    ``stochastic=False`` (the default) uses deterministic round-to-nearest —
+    required for the delta-refresh exactness guarantee; stochastic rounding is
+    allowed but makes deltas unbiased rather than exact. ``max_staleness`` is
+    the number of consecutive delta refreshes served before the next refresh
+    is forced to a full sweep."""
+
+    bits: int = 1
+    stochastic: bool = False
+    max_staleness: int = 8
+    scale_dtype: jnp.dtype = jnp.bfloat16
+    quant_impl: str = "auto"
+
+
+class ServeComm(SylvieComm):
+    """Forward-only quantized halo with delta blending.
+
+    At site ``i``: quantize the (full) send buffer, exchange, dequantize, then
+    keep only the rows the refresh plan marked affected — every other row
+    comes from ``cached_halos[i]``. The affected mask travels through the same
+    exchange so each partition learns which *received* rows are fresh. Records
+    the site-input embedding (the per-layer cache) and the blended halo (the
+    next refresh's cache) as it goes. No custom_vjp: serving never
+    differentiates."""
+
+    def __init__(self, cfg, plan, key, backend, decision, cached_halos,
+                 send_affected):
+        super().__init__(cfg, plan, key, backend=backend, decision=decision)
+        self.cached_halos = cached_halos
+        self.send_affected = send_affected
+        self.layer_inputs: list = []
+
+    def halo(self, h: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        i = self._site
+        self._site += 1
+        sd = self._site_decision(i)
+        kf = jax.random.fold_in(self._part_key(), 2 * i)
+        self.layer_inputs.append(h)
+        buf = gather_boundary(h, self.plan)
+        qt = qlib.quantize(buf, sd.fwd_bits, kf, sd.stochastic,
+                           cfg.scale_dtype, impl=cfg.quant_impl)
+        fresh = qlib.dequantize(
+            exchange_quantized_halo(qt, self.plan, self.backend),
+            impl=cfg.quant_impl)
+        fresh = jnp.where(self.plan.recv_mask[..., None], fresh, 0)
+        # which received rows are fresh = the senders' affected masks, moved
+        # through the same exchange (1 float per row; the wire-accounting
+        # charges the 1-bit-per-row bitmap this stands in for)
+        aff = exchange_halo(self.send_affected[i][..., None], self.plan,
+                            self.backend)
+        halo = jnp.where(aff > 0.5, fresh, self.cached_halos[i])
+        self.new_feat_caches.append(halo)
+        return halo
+
+
+@dataclasses.dataclass
+class QueryResult:
+    """One answered query batch."""
+
+    node_ids: np.ndarray
+    logits: np.ndarray
+
+    @property
+    def predictions(self) -> np.ndarray:
+        return np.argmax(self.logits, axis=-1)
+
+
+class InferenceEngine:
+    """Quantized full-graph inference over a partitioned graph.
+
+    Example::
+
+        pg, _ = datasets.load_partitioned("yelp_like@small", n_parts=4)
+        params, meta = checkpoint.restore_for_inference(ckpt_dir,
+                                                        model.init(key))
+        eng = InferenceEngine(model, pg, params,
+                              config=ServeConfig(bits=1))
+        eng.full_sweep()                        # materialize all caches
+        out = eng.query([3, 17, 4242])          # O(lookup)
+        rep = eng.refresh(changed_ids, new_rows)   # k-hop delta refresh
+        print(rep.kind, rep.wire_bytes)
+    """
+
+    def __init__(self, model, pg: PartitionedGraph, params,
+                 config: Optional[ServeConfig] = None,
+                 decision: Optional[EpochDecision] = None,
+                 runtime: Optional[Runtime] = None, seed: int = 0):
+        self.model = model
+        self.pg = pg
+        self.config = cfg = config if config is not None else ServeConfig()
+        p = pg.plan.n_parts
+        if runtime is None:
+            runtime = Runtime.simulated(p)
+        if runtime.n_parts not in (None, p):
+            raise ValueError(
+                f"runtime is committed to {runtime.n_parts} partitions but "
+                f"the graph was partitioned into {p}")
+        self.runtime = runtime
+        self.site_dims = tuple(int(d) for d in model.comm_dims())
+        self.n_sites = len(self.site_dims)
+        if decision is None:
+            decision = EpochDecision.uniform(self.n_sites, bits=cfg.bits,
+                                             stochastic=cfg.stochastic)
+        self.decision = validate_decision(decision.snapped(), self.n_sites)
+        self._scfg = SylvieConfig(mode="sync", bits=cfg.bits,
+                                  stochastic=cfg.stochastic,
+                                  scale_dtype=cfg.scale_dtype,
+                                  quant_impl=cfg.quant_impl)
+        self.block = B.build_block(pg)
+        self.key = jax.random.PRNGKey(seed)
+
+        # global id -> (partition, local slot): the O(lookup) request path
+        n = int(pg.part_of.shape[0])
+        self._slot_of = np.full(n, -1, dtype=np.int64)
+        pi, li = np.nonzero(pg.node_mask)
+        self._slot_of[pg.global_ids[pi, li]] = li
+        self._part_of = pg.part_of.astype(np.int64)
+
+        self._sweep = self._build_sweep()
+        # refresh planning amortizes the O(E) edge/ownership reconstruction
+        self._frontier = deltalib.FrontierIndex.build(pg)
+        self.params = runtime.device_put_replicated(params)
+        self.block = runtime.device_put_stacked(self.block)
+        self._x_host = np.asarray(pg.x, dtype=np.float32).copy()
+        self.x = runtime.device_put_stacked(jnp.asarray(self._x_host))
+        self._halos = runtime.device_put_stacked(
+            HaloState.zeros(self.block.plan, self.site_dims,
+                            stacked_parts=p).feats)
+        self._layers: Optional[tuple] = None
+        self._logits_host: Optional[np.ndarray] = None
+        self._since_full = 0
+        self._refresh_count = 0
+
+    # ------------------------------------------------------------------
+    # the sweep executable (shared by full sweeps and delta refreshes)
+    # ------------------------------------------------------------------
+    def _build_sweep(self):
+        model, scfg, decision = self.model, self._scfg, self.decision
+        backend = self.runtime.backend
+
+        def sweep_fn(params, block, x, halos, masks, key):
+            comm = ServeComm(scfg, block.plan, key, backend, decision,
+                             cached_halos=halos, send_affected=masks)
+            logits = model.apply(params, block, x, comm)
+            return logits, tuple(comm.layer_inputs), \
+                tuple(comm.new_feat_caches)
+
+        return self.runtime.shard_serve_fn(sweep_fn)
+
+    def _run(self, refresh: deltalib.RefreshPlan, *, kind: str,
+             forced: bool) -> deltalib.RefreshReport:
+        t0 = time.time()
+        key = jax.random.fold_in(self.key, self._refresh_count)
+        self._refresh_count += 1
+        logits, layers, halos = self._sweep(self.params, self.block, self.x,
+                                            self._halos,
+                                            refresh.device_masks(), key)
+        self._layers = layers
+        self._halos = halos
+        self._logits_host = np.asarray(jax.device_get(logits))
+        pb, eb, mb = deltalib.refresh_wire_bytes(
+            self.block.plan.real_rows, self.site_dims, self.decision, refresh,
+            self.config.scale_dtype)
+        return deltalib.RefreshReport(
+            kind=kind, forced=forced, changed=refresh.changed,
+            affected_rows=refresh.affected_rows, payload_bytes=pb,
+            ec_bytes=eb, meta_bytes=mb, seconds=time.time() - t0)
+
+    # ------------------------------------------------------------------
+    # public API
+    # ------------------------------------------------------------------
+    @staticmethod
+    def from_checkpoint(ckpt_dir, model, pg: PartitionedGraph,
+                        config: Optional[ServeConfig] = None,
+                        decision: Optional[EpochDecision] = None,
+                        runtime: Optional[Runtime] = None,
+                        step: Optional[int] = None, seed: int = 0
+                        ) -> tuple["InferenceEngine", dict]:
+        """Train -> save -> serve handoff: restore only the model parameters
+        (``checkpoint.restore_for_inference``) and build an engine. Returns
+        ``(engine, checkpoint_meta)``."""
+        example = model.init(jax.random.PRNGKey(0))
+        params, meta = ckpt.restore_for_inference(ckpt_dir, example, step=step)
+        return InferenceEngine(model, pg, params, config=config,
+                               decision=decision, runtime=runtime,
+                               seed=seed), meta
+
+    def full_sweep(self) -> deltalib.RefreshReport:
+        """Recompute every cache from the current features (all boundary rows
+        ship). Resets the staleness clock."""
+        rep = self._run(deltalib.plan_full(self.pg, self.n_sites),
+                        kind="full", forced=False)
+        self._since_full = 0
+        return rep
+
+    def refresh(self, changed_global_ids, new_rows, *,
+                full: bool = False) -> deltalib.RefreshReport:
+        """Apply a feature update and refresh the caches incrementally.
+
+        ``new_rows`` are the replacement feature rows for
+        ``changed_global_ids`` (same order). Ships only the k-hop-affected
+        boundary rows per layer; escalates to a full sweep when ``full=True``
+        is requested, the staleness bound is reached, or no sweep has run yet
+        (a delta against the zero-initialized caches would serve garbage)."""
+        ids = self._check_ids(changed_global_ids)
+        rows = np.asarray(new_rows, dtype=np.float32)
+        if rows.shape != (ids.size, self._x_host.shape[-1]):
+            raise ValueError(
+                f"new_rows must be ({ids.size}, {self._x_host.shape[-1]}), "
+                f"got {rows.shape}")
+        # scatter the changed rows on device — O(changed), never a full
+        # O(N*d) re-upload — and mirror them into the host copy
+        self._x_host[self._part_of[ids], self._slot_of[ids]] = rows
+        self.x = self.runtime.device_put_stacked(
+            self.x.at[self._part_of[ids], self._slot_of[ids]].set(
+                jnp.asarray(rows)))
+        never_swept = self._logits_host is None
+        if full or never_swept or \
+                self._since_full >= self.config.max_staleness:
+            rep = self._run(deltalib.plan_full(self.pg, self.n_sites),
+                            kind="full", forced=not full)
+            rep = dataclasses.replace(rep, changed=int(ids.size))
+            self._since_full = 0
+            return rep
+        plan = self._frontier.plan_refresh(ids, self.n_sites)
+        rep = self._run(plan, kind="delta", forced=False)
+        self._since_full += 1
+        return rep
+
+    def _require_swept(self):
+        if self._logits_host is None:
+            raise RuntimeError("no caches yet — call full_sweep() first")
+
+    def _check_ids(self, node_ids) -> np.ndarray:
+        """Normalize + bounds-check global node ids *before* any state is
+        touched (numpy's negative indexing would otherwise silently address
+        the wrong node)."""
+        ids = np.asarray(node_ids, dtype=np.int64).reshape(-1)
+        n = self._slot_of.shape[0]
+        if ids.size and (ids.min() < 0 or ids.max() >= n):
+            raise ValueError(f"node ids must be in [0, {n})")
+        return ids
+
+    def query(self, node_ids) -> QueryResult:
+        """Logits for a batch of global node ids — a cache lookup, no graph
+        compute."""
+        self._require_swept()
+        ids = self._check_ids(node_ids)
+        out = self._logits_host[self._part_of[ids], self._slot_of[ids]]
+        return QueryResult(node_ids=ids, logits=out)
+
+    def embeddings(self, node_ids, site: int = -1) -> np.ndarray:
+        """Cached embeddings entering exchange site ``site`` for a batch of
+        global node ids (``-1`` = last site, the deepest cached layer).
+        Gathers the requested rows on device — only O(batch * d) crosses to
+        the host, never the full layer table."""
+        self._require_swept()
+        ids = self._check_ids(node_ids)
+        rows = self._layers[site][self._part_of[ids], self._slot_of[ids]]
+        return np.asarray(jax.device_get(rows))
+
+    @property
+    def logits(self) -> np.ndarray:
+        """The full cached logits table, reassembled into global node order."""
+        self._require_swept()
+        return self.pg.unpartition(self._logits_host)
+
+    def full_sweep_wire_bytes(self) -> int:
+        """What one full sweep ships (payload + ec), for comparison against a
+        delta's :attr:`RefreshReport.wire_bytes`."""
+        pb, eb, mb = deltalib.refresh_wire_bytes(
+            self.block.plan.real_rows, self.site_dims, self.decision,
+            deltalib.plan_full(self.pg, self.n_sites),
+            self.config.scale_dtype)
+        return pb + eb + mb

@@ -1,0 +1,83 @@
+"""Seeded closed-loop load generator for the serving request path.
+
+Closed-loop: ``clients`` logical clients each keep exactly one request in
+flight — a client issues, waits for its response, then immediately issues the
+next (the standard closed-system model, so offered load adapts to service
+rate instead of overrunning it). Queries are batches of node ids drawn from a
+seeded RNG, so two runs offer byte-identical workloads.
+
+The report is the serving row of ``BENCH_serve.json``: completed requests,
+QPS, p50/p99 latency (measured queue-to-completion through the server's
+microbatcher), admission rejections, and the id-distribution parameters that
+produced it. Optionally interleaves a feature-refresh every
+``refresh_every`` completed requests to measure the mixed read/refresh
+regime.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import numpy as np
+
+from .server import EmbeddingServer
+
+
+def percentiles_ms(latencies_s) -> dict:
+    lat = np.asarray(sorted(latencies_s), dtype=np.float64) * 1e3
+    if lat.size == 0:
+        return dict(p50_ms=0.0, p99_ms=0.0, mean_ms=0.0)
+    return dict(p50_ms=float(np.percentile(lat, 50)),
+                p99_ms=float(np.percentile(lat, 99)),
+                mean_ms=float(lat.mean()))
+
+
+def closed_loop(server: EmbeddingServer, n_nodes: int, *, clients: int = 8,
+                batch: int = 16, requests: int = 200, seed: int = 0,
+                refresh_every: Optional[int] = None,
+                refresh_nodes: int = 0) -> dict:
+    """Drive ``server`` with ``clients`` closed-loop clients until
+    ``requests`` responses complete; return the load report dict.
+
+    ``refresh_every``/``refresh_nodes`` interleave an engine delta refresh
+    (random nodes, re-seeded feature rows) every N completions — the mixed
+    serving + incremental-update regime. Refresh wire bytes are totaled in
+    the report, refresh time is *included* in the wall clock (it stalls the
+    request path, exactly as it would in-process)."""
+    rng = np.random.default_rng(seed)
+    latencies: list[float] = []
+    refresh_bytes = 0
+    refreshes = 0
+    issued = completed = 0
+    outstanding = 0
+    d_feat = server.engine.pg.x.shape[-1]
+    next_refresh = refresh_every if refresh_every else None
+    t0 = time.perf_counter()
+    while completed < requests:
+        while outstanding < clients and issued < requests:
+            ids = rng.integers(0, n_nodes, size=batch)
+            if server.submit(ids) is None:
+                break                       # admission queue full; back off
+            issued += 1
+            outstanding += 1
+        for resp in server.step():
+            latencies.append(resp.latency_s)
+            completed += 1
+            outstanding -= 1
+        if next_refresh is not None and completed >= next_refresh:
+            ids = rng.choice(n_nodes, size=max(1, refresh_nodes),
+                             replace=False)
+            rows = rng.normal(0, 1, size=(ids.size, d_feat)).astype(np.float32)
+            rep = server.engine.refresh(ids, rows)
+            refresh_bytes += rep.wire_bytes
+            refreshes += 1
+            next_refresh += refresh_every
+    seconds = time.perf_counter() - t0
+    report = dict(requests=int(completed), clients=int(clients),
+                  batch=int(batch), seed=int(seed), seconds=float(seconds),
+                  qps=float(completed / max(seconds, 1e-9)),
+                  rejected=int(server.rejected),
+                  refreshes=int(refreshes),
+                  refresh_wire_bytes=int(refresh_bytes),
+                  **percentiles_ms(latencies))
+    return report

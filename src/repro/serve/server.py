@@ -1,0 +1,127 @@
+"""In-process request path: admission queue + microbatched cache lookups.
+
+``EmbeddingServer`` fronts an :class:`~repro.serve.engine.InferenceEngine`
+with the two mechanisms a real serving tier needs even when the per-query work
+is a cache lookup:
+
+* **admission queue** — ``submit`` enqueues a request or *rejects* it
+  (returns ``None``) when ``max_queue`` requests are already waiting;
+  back-pressure instead of unbounded latency;
+* **microbatching** — ``step`` drains whole requests until the next one would
+  overflow ``microbatch`` node ids, answers them with a single engine lookup,
+  and stamps each response with its queue-to-completion latency.
+
+The server is deliberately synchronous and single-threaded: the load
+generator (``loadgen.py``) drives ``submit``/``step`` as a closed loop, and
+determinism (seeded ids, no thread scheduling) keeps the latency distribution
+reproducible enough to regression-track in ``BENCH_serve.json``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    req_id: int
+    node_ids: np.ndarray
+    t_submit: float
+
+
+@dataclasses.dataclass
+class Response:
+    req_id: int
+    node_ids: np.ndarray
+    logits: np.ndarray
+    latency_s: float
+
+    @property
+    def predictions(self) -> np.ndarray:
+        return np.argmax(self.logits, axis=-1)
+
+
+class EmbeddingServer:
+    """Microbatched, admission-controlled front end over an engine.
+
+    Example::
+
+        srv = EmbeddingServer(engine, microbatch=128, max_queue=256)
+        rid = srv.submit([1, 2, 3])
+        [resp] = srv.step()
+        assert resp.req_id == rid and resp.logits.shape == (3, n_classes)
+    """
+
+    def __init__(self, engine, microbatch: int = 128, max_queue: int = 1024,
+                 clock: Optional[Callable[[], float]] = None):
+        if microbatch < 1 or max_queue < 1:
+            raise ValueError("microbatch and max_queue must be >= 1")
+        self.engine = engine
+        self.microbatch = microbatch
+        self.max_queue = max_queue
+        self.clock = clock if clock is not None else time.perf_counter
+        self._queue: deque[Request] = deque()
+        self._next_id = 0
+        self.accepted = 0
+        self.rejected = 0
+        self.served = 0
+
+    @property
+    def depth(self) -> int:
+        """Requests currently waiting."""
+        return len(self._queue)
+
+    def submit(self, node_ids) -> Optional[int]:
+        """Enqueue a query batch. Returns the request id, or ``None`` when
+        the admission queue is full (the caller should back off and retry).
+        A single request larger than the microbatch can never be scheduled
+        and is a caller error."""
+        ids = np.asarray(node_ids, dtype=np.int64).reshape(-1)
+        if ids.size == 0 or ids.size > self.microbatch:
+            raise ValueError(
+                f"request size must be in [1, microbatch={self.microbatch}], "
+                f"got {ids.size}")
+        if len(self._queue) >= self.max_queue:
+            self.rejected += 1
+            return None
+        rid = self._next_id
+        self._next_id += 1
+        self._queue.append(Request(rid, ids, self.clock()))
+        self.accepted += 1
+        return rid
+
+    def step(self) -> list[Response]:
+        """Serve one microbatch: drain whole requests up to ``microbatch``
+        ids, answer them with a single cache lookup, return the responses
+        (possibly empty when the queue is)."""
+        batch: list[Request] = []
+        total = 0
+        while self._queue and total + self._queue[0].node_ids.size \
+                <= self.microbatch:
+            req = self._queue.popleft()
+            batch.append(req)
+            total += req.node_ids.size
+        if not batch:
+            return []
+        flat = np.concatenate([r.node_ids for r in batch])
+        logits = self.engine.query(flat).logits
+        now = self.clock()
+        out, start = [], 0
+        for r in batch:
+            stop = start + r.node_ids.size
+            out.append(Response(r.req_id, r.node_ids, logits[start:stop],
+                                now - r.t_submit))
+            start = stop
+        self.served += len(out)
+        return out
+
+    def drain(self) -> list[Response]:
+        """Serve until the queue is empty."""
+        out = []
+        while self._queue:
+            out.extend(self.step())
+        return out

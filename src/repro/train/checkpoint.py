@@ -17,7 +17,19 @@ Fault-tolerance contract:
     checkpoint taken at N partitions restores at N' — ``restore`` detects a
     halo-cache shape mismatch, zeroes the caches, and flags
     ``needs_sync_epoch`` so the trainer runs one synchronous epoch (the
-    Bounded Staleness Adaptor's refresh) before resuming pipelined steps.
+    Bounded Staleness Adaptor's refresh) before resuming pipelined steps;
+  * versioned: every manifest records ``format_version`` so readers can
+    refuse checkpoints newer than they understand (pre-versioning manifests
+    read as version 1).
+
+Train -> serve handoff: :func:`restore_for_inference` loads *only* the model
+parameters out of a full :class:`~repro.train.gnn_step.GNNTrainState`
+checkpoint — optimizer state, EF21 compressor state, Sylvie-A halo caches,
+site telemetry and the step counter are training-only leaves the inference
+engine (``repro.serve``) neither needs nor trusts (halo caches are rebuilt by
+the engine's first full sweep at serving precision). Unlike :func:`restore`,
+missing or shape-mismatched *parameter* leaves are an error, never zero-filled
+— serving zeroed weights is silent garbage.
 """
 from __future__ import annotations
 
@@ -31,6 +43,13 @@ import jax
 import numpy as np
 
 SEP = "/"
+
+# Manifest format history:
+#   1 — unversioned (PR 1..5): step / keys / shapes / dtypes / meta
+#   2 — adds the explicit "format_version" field (contents unchanged; the
+#       GNNTrainState itself grew ef/site_stats leaves back in PR 4, which
+#       path-keyed flattening absorbs without a format change)
+FORMAT_VERSION = 2
 
 
 def _flatten(tree) -> dict[str, Any]:
@@ -54,7 +73,8 @@ def save(ckpt_dir: str | os.PathLike, step: int, tree, meta: Optional[dict] = No
 
     flat = {k: np.asarray(jax.device_get(v)) for k, v in _flatten(tree).items()}
     np.savez(tmp / "arrays.npz", **flat)
-    manifest = dict(step=int(step), keys=sorted(flat),
+    manifest = dict(format_version=FORMAT_VERSION, step=int(step),
+                    keys=sorted(flat),
                     shapes={k: list(v.shape) for k, v in flat.items()},
                     dtypes={k: str(v.dtype) for k, v in flat.items()},
                     meta=meta or {})
@@ -79,6 +99,23 @@ def latest_step(ckpt_dir: str | os.PathLike) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def _open(ckpt_dir: str | os.PathLike, step: Optional[int]):
+    """Resolve + open one checkpoint: (dir, manifest, arrays). Refuses
+    manifests written by a *newer* format than this reader understands."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    d = Path(ckpt_dir) / f"step_{step:08d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    version = int(manifest.get("format_version", 1))
+    if version > FORMAT_VERSION:
+        raise ValueError(
+            f"{d} was written with checkpoint format {version}; this reader "
+            f"understands <= {FORMAT_VERSION}")
+    return d, manifest, np.load(d / "arrays.npz")
+
+
 def restore(ckpt_dir: str | os.PathLike, example_tree,
             step: Optional[int] = None):
     """-> (tree, manifest_meta, needs_sync_epoch).
@@ -87,13 +124,7 @@ def restore(ckpt_dir: str | os.PathLike, example_tree,
     shape mismatches (halo caches after an elastic repartition) are replaced
     with zeros of the target shape and flagged.
     """
-    if step is None:
-        step = latest_step(ckpt_dir)
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
-    d = Path(ckpt_dir) / f"step_{step:08d}"
-    manifest = json.loads((d / "manifest.json").read_text())
-    stored = np.load(d / "arrays.npz")
+    d, manifest, stored = _open(ckpt_dir, step)
     flat_example = _flatten(example_tree)
     needs_sync = False
     out = {}
@@ -115,3 +146,46 @@ def restore(ckpt_dir: str | os.PathLike, example_tree,
                      for p in path) or "_root" for path, _ in leaves_paths]
     tree = jax.tree_util.tree_unflatten(treedef, [out[k] for k in keys])
     return tree, manifest["meta"], needs_sync
+
+
+def restore_for_inference(ckpt_dir: str | os.PathLike, example_params,
+                          step: Optional[int] = None):
+    """Load only the model parameters of a :class:`GNNTrainState` checkpoint.
+
+    ``example_params`` supplies the parameter pytree structure + target
+    shapes/dtypes (``model.init(key)`` on any key works — only structure is
+    read). Training-only leaves (optimizer / EF21 / halo caches / telemetry /
+    step counter) are never materialized. Returns ``(params, meta)`` where
+    ``meta`` is the manifest's user meta dict augmented with ``step`` and
+    ``format_version``.
+
+    Raises ``KeyError`` on a missing parameter leaf and ``ValueError`` on a
+    shape mismatch — a serving process must fail loudly rather than serve
+    zero-filled weights (contrast :func:`restore`, whose zero-fill is the
+    *elastic resume* contract for halo caches).
+    """
+    _, manifest, stored = _open(ckpt_dir, step)
+    flat_example = _flatten(example_params)
+    out = {}
+    for key, ex in flat_example.items():
+        stored_key = f"params{SEP}{key}" if key != "_root" else "params"
+        if stored_key not in stored.files:
+            raise KeyError(
+                f"checkpoint step_{manifest['step']:08d} has no leaf "
+                f"{stored_key!r}; is this a GNNTrainState checkpoint for "
+                f"this model?")
+        arr = stored[stored_key]
+        ex_shape = tuple(getattr(ex, "shape", ()))
+        if tuple(arr.shape) != ex_shape:
+            raise ValueError(
+                f"parameter {stored_key!r} has stored shape {arr.shape}, "
+                f"model expects {ex_shape}")
+        out[key] = arr.astype(getattr(ex, "dtype", np.float32))
+    leaves_paths, treedef = jax.tree_util.tree_flatten_with_path(example_params)
+    keys = [SEP.join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+                     for p in path) or "_root" for path, _ in leaves_paths]
+    params = jax.tree_util.tree_unflatten(treedef, [out[k] for k in keys])
+    meta = dict(manifest["meta"])
+    meta["step"] = int(manifest["step"])
+    meta["format_version"] = int(manifest.get("format_version", 1))
+    return params, meta

@@ -1,0 +1,456 @@
+"""repro.serve: inference engine, k-hop delta refresh, request path.
+
+Contracts under test:
+  * ``khop_frontier`` == brute-force BFS on the global edge list (both plan
+    layouts — the frontier is reconstructed from the plan's boundary
+    structure, so this also validates ``halo_source_globals``);
+  * serving parity: engine logits at 32 bits == a direct jit'd forward of the
+    trained model, **bit-for-bit**, simulated and shard_map; quantized
+    serving stays within the accuracy band the training-side parity tests
+    use;
+  * incremental refresh: a k-hop delta refresh == a full recompute
+    **exactly** under deterministic rounding (same executable — structural
+    guarantee), while shipping a fraction of the bytes; the staleness bound
+    escalates to a forced full sweep;
+  * train -> save -> serve: ``restore_for_inference`` round-trips params
+    (manifest carries ``format_version``), refuses zero-fill;
+  * server/loadgen: microbatching answers == direct engine lookups, the
+    admission queue rejects past its depth, the seeded closed loop reports a
+    full latency distribution.
+
+The shard_map checks run inline when the session already has >= 4 devices
+(the CI ``--serve`` lane) and in a `slow` subprocess otherwise.
+"""
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.sylvie import SylvieComm, SylvieConfig
+from repro.graph import formats, partition, synthetic
+from repro.models.gnn import blocks as B
+from repro.models.gnn.models import GCN, GraphSAGE
+from repro.serve import (EmbeddingServer, InferenceEngine, ServeConfig,
+                         closed_loop)
+from repro.serve import delta as deltalib
+from repro.train import checkpoint as ckpt
+from repro.train.trainer import GNNTrainer
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+KEY = jax.random.PRNGKey(0)
+
+
+def _graph(n=300, d=16, seed=0):
+    g = synthetic.planted_partition(n_nodes=n, d_feat=d, seed=seed)
+    ei = formats.add_self_loops(g.edge_index, g.n_nodes)
+    ew = formats.gcn_edge_weights(ei, g.n_nodes)
+    return formats.Graph(g.n_nodes, ei, g.x, g.y, g.train_mask, g.val_mask,
+                         g.test_mask, n_classes=g.n_classes), ew
+
+
+def _pg(parts=4, layout="compact", **kw):
+    g, ew = _graph(**kw)
+    return g, partition.partition_graph(g, parts, edge_weight=ew,
+                                        layout=layout)
+
+
+def _trained(pg, g, tmp_path, epochs=6, model=None):
+    model = model or GCN(g.x.shape[1], 32, g.n_classes, n_layers=2)
+    tr = GNNTrainer(model, pg, SylvieConfig(mode="sync", bits=1),
+                    ckpt_dir=str(tmp_path))
+    tr.fit(epochs)
+    tr.save()
+    return model, tr
+
+
+# ---------------------------------------------------------------------------
+# khop_frontier vs brute-force BFS (satellite: graph/partition.py helper)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("layout", ["dense", "compact"])
+def test_khop_frontier_matches_bruteforce_bfs(layout):
+    g, pg = _pg(layout=layout, n=250)
+    seeds = np.array([3, 57, 101])
+    k = 3
+    fr = partition.khop_frontier(pg, seeds, k)
+    assert fr.shape == (k + 1, g.n_nodes)
+    src, dst = g.edge_index
+    cur = np.zeros(g.n_nodes, bool)
+    cur[seeds] = True
+    for h in range(k + 1):
+        np.testing.assert_array_equal(fr[h], cur, err_msg=f"hop {h}")
+        nxt = cur.copy()
+        for s, t in zip(src, dst):       # brute force, edge at a time
+            if cur[s]:
+                nxt[t] = True
+        cur = nxt
+    # monotone and eventually saturating on a connected-ish graph
+    assert (fr.sum(axis=1) == np.maximum.accumulate(fr.sum(axis=1))).all()
+
+
+def test_khop_frontier_validates_seeds():
+    _, pg = _pg(n=100)
+    with pytest.raises(ValueError):
+        partition.khop_frontier(pg, [100], 1)
+    fr = partition.khop_frontier(pg, [], 2)     # empty seed set is legal
+    assert fr.sum() == 0
+
+
+@pytest.mark.parametrize("layout", ["dense", "compact"])
+def test_global_edges_reconstruct_edge_set(layout):
+    g, pg = _pg(layout=layout, n=200)
+    src_g, dst_g = partition.global_edges(pg)
+    got = set(zip(src_g.tolist(), dst_g.tolist()))
+    want = set(zip(g.edge_index[0].tolist(), g.edge_index[1].tolist()))
+    assert got == want
+
+
+# ---------------------------------------------------------------------------
+# serving parity (satellite: engine == direct forward, bit-for-bit)
+# ---------------------------------------------------------------------------
+def test_engine_fp32_bitexact_vs_direct_forward(tmp_path):
+    g, pg = _pg()
+    model, tr = _trained(pg, g, tmp_path)
+    eng, meta = InferenceEngine.from_checkpoint(tmp_path, model, pg,
+                                                config=ServeConfig(bits=32))
+    assert meta["format_version"] == ckpt.FORMAT_VERSION
+    eng.full_sweep()
+
+    block, x = B.build_block(pg), jnp.asarray(pg.x)
+
+    @jax.jit
+    def direct(params, block, x, key):
+        comm = SylvieComm(SylvieConfig(mode="vanilla", stochastic=False),
+                          block.plan, key)
+        return model.apply(params, block, x, comm)
+
+    ref = np.asarray(direct(tr.state.params, block, x, KEY))
+    np.testing.assert_array_equal(eng._logits_host, ref)
+    # and the query path agrees with the unpartitioned table
+    ids = np.array([0, 7, 123, g.n_nodes - 1])
+    np.testing.assert_array_equal(eng.query(ids).logits, eng.logits[ids])
+
+
+def test_engine_quantized_within_training_parity_band(tmp_path):
+    """1-bit serving must hold the accuracy band the trainer's own quantized
+    runs are held to (test_trainer: 1-bit training reaches > 0.85)."""
+    g, pg = _pg()
+    model, tr = _trained(pg, g, tmp_path, epochs=12)
+    f32, _ = InferenceEngine.from_checkpoint(tmp_path, model, pg,
+                                             config=ServeConfig(bits=32))
+    q1, _ = InferenceEngine.from_checkpoint(tmp_path, model, pg,
+                                            config=ServeConfig(bits=1))
+    f32.full_sweep()
+    q1.full_sweep()
+    y = np.asarray(g.y)
+    mask = np.asarray(g.test_mask)
+    acc32 = (f32.logits.argmax(-1) == y)[mask].mean()
+    acc1 = (q1.logits.argmax(-1) == y)[mask].mean()
+    assert acc32 > 0.85
+    assert acc1 >= acc32 - 0.02, (acc1, acc32)
+    # 1-bit payload is 32x smaller; scale/zero error-compensation (2 bf16 per
+    # row) caps the *total* wire ratio near 14x at this feature width
+    assert f32.full_sweep_wire_bytes() > 10 * q1.full_sweep_wire_bytes()
+
+
+def test_engine_per_site_bits_via_decision(tmp_path):
+    """Per-site widths ride the same EpochDecision lattice training uses."""
+    from repro.policy.base import EpochDecision, SiteDecision
+    g, pg = _pg()
+    model, _ = _trained(pg, g, tmp_path, epochs=2)
+    dec = EpochDecision(sites=(SiteDecision(fwd_bits=1, bwd_bits=1,
+                                            stochastic=False),
+                               SiteDecision(fwd_bits=8, bwd_bits=8,
+                                            stochastic=False)))
+    eng, _ = InferenceEngine.from_checkpoint(tmp_path, model, pg,
+                                             decision=dec)
+    rep = eng.full_sweep()
+    d0, d1 = eng.site_dims
+    rows = rep.affected_rows
+    from repro.core.quantization import comm_bytes
+    want = comm_bytes(rows[0], d0, 1)[0] + comm_bytes(rows[1], d1, 8)[0]
+    assert rep.payload_bytes == want
+
+
+# ---------------------------------------------------------------------------
+# incremental refresh (satellite: delta == full recompute, staleness bound)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("model_cls", [GCN, GraphSAGE])
+@pytest.mark.parametrize("layout", ["dense", "compact"])
+def test_delta_refresh_equals_full_recompute(tmp_path, layout, model_cls):
+    g, pg = _pg(layout=layout)
+    model = model_cls(g.x.shape[1], 32, g.n_classes, n_layers=2)
+    model, _ = _trained(pg, g, tmp_path, epochs=4, model=model)
+
+    rng = np.random.default_rng(7)
+    ids = rng.choice(g.n_nodes, size=6, replace=False)
+    rows = rng.normal(0, 1, (6, g.x.shape[1])).astype(np.float32)
+
+    a, _ = InferenceEngine.from_checkpoint(tmp_path, model, pg,
+                                           config=ServeConfig(bits=1))
+    b, _ = InferenceEngine.from_checkpoint(tmp_path, model, pg,
+                                           config=ServeConfig(bits=1))
+    a.full_sweep()
+    b.full_sweep()
+    da = a.refresh(ids, rows)                  # k-hop delta
+    db = b.refresh(ids, rows, full=True)       # ground truth: full recompute
+    assert da.kind == "delta" and db.kind == "full"
+    np.testing.assert_array_equal(a._logits_host, b._logits_host)
+    for la, lb in zip(a._layers, b._layers):   # every cached layer, exactly
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    for ha, hb in zip(a._halos, b._halos):
+        np.testing.assert_array_equal(np.asarray(ha), np.asarray(hb))
+    # the delta shipped a strict subset of the rows + the bitmap metadata
+    assert all(r1 < r2 for r1, r2 in zip(da.affected_rows, db.affected_rows))
+    assert da.meta_bytes > 0 and db.meta_bytes == 0
+    assert da.wire_bytes < db.wire_bytes
+
+
+def test_delta_affected_rows_grow_with_hops(tmp_path):
+    """Site i re-ships the i-hop frontier: monotone nondecreasing row counts
+    across sites, and exact against a host-side recount."""
+    g, pg = _pg()
+    ids = np.array([11, 42])
+    plan = deltalib.plan_refresh(pg, ids, n_sites=2)
+    assert plan.affected_rows[0] <= plan.affected_rows[1]
+    fr = partition.khop_frontier(pg, ids, 1)
+    sg = deltalib._send_globals(pg)
+    base = pg.plan.send_mask.reshape(pg.plan.n_parts, -1)
+    for i in range(2):
+        want = int((base & fr[i][np.clip(sg, 0, None)]).sum())
+        assert plan.affected_rows[i] == want
+
+
+def test_staleness_bound_forces_full_sweep(tmp_path):
+    g, pg = _pg()
+    model, _ = _trained(pg, g, tmp_path, epochs=2)
+    eng, _ = InferenceEngine.from_checkpoint(
+        tmp_path, model, pg, config=ServeConfig(bits=1, max_staleness=2))
+    eng.full_sweep()
+    rng = np.random.default_rng(0)
+    kinds = []
+    for i in range(5):
+        ids = rng.choice(g.n_nodes, 3, replace=False)
+        rows = rng.normal(0, 1, (3, g.x.shape[1])).astype(np.float32)
+        r = eng.refresh(ids, rows)
+        kinds.append((r.kind, r.forced))
+    # two deltas, then the bound escalates, then the clock restarts
+    assert kinds == [("delta", False), ("delta", False), ("full", True),
+                     ("delta", False), ("delta", False)]
+
+
+def test_refresh_validates_ids_and_rows_before_mutating(tmp_path):
+    g, pg = _pg()
+    model, _ = _trained(pg, g, tmp_path, epochs=1)
+    eng, _ = InferenceEngine.from_checkpoint(tmp_path, model, pg)
+    eng.full_sweep()
+    with pytest.raises(ValueError):
+        eng.refresh([1, 2], np.zeros((2, 3), np.float32))
+    # out-of-range (incl. negative — numpy would silently wrap) ids must be
+    # rejected *before* any feature row is touched
+    before = eng._x_host.copy()
+    for bad in ([-2], [g.n_nodes]):
+        with pytest.raises(ValueError):
+            eng.refresh(np.array(bad),
+                        np.zeros((1, g.x.shape[1]), np.float32))
+    np.testing.assert_array_equal(eng._x_host, before)
+    with pytest.raises(ValueError):
+        eng.query([-1])
+    # embeddings gather stays row-sized and correct
+    emb = eng.embeddings([3, 5], site=0)
+    assert emb.shape == (2, g.x.shape[1])
+
+
+# ---------------------------------------------------------------------------
+# train -> save -> serve handoff (satellite: checkpoint round trip)
+# ---------------------------------------------------------------------------
+def test_restore_for_inference_roundtrip_and_guards(tmp_path):
+    g, pg = _pg()
+    model, tr = _trained(pg, g, tmp_path, epochs=3)
+    example = model.init(jax.random.PRNGKey(9))   # any key: structure only
+    params, meta = ckpt.restore_for_inference(tmp_path, example)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), params, tr.state.params)
+    assert meta["format_version"] == ckpt.FORMAT_VERSION
+    assert meta["step"] == tr.epoch
+
+    # wrong model structure -> loud failure, never zero-fill
+    other = GCN(g.x.shape[1], 64, g.n_classes, n_layers=2)
+    with pytest.raises(ValueError):
+        ckpt.restore_for_inference(tmp_path, other.init(KEY))
+    with pytest.raises(KeyError):
+        ckpt.restore_for_inference(
+            tmp_path, {"not_a_layer": np.zeros((2, 2), np.float32)})
+
+
+def test_checkpoint_refuses_newer_format(tmp_path):
+    import json
+    g, pg = _pg()
+    _trained(pg, g, tmp_path, epochs=1)
+    man_path = next(Path(tmp_path).glob("step_*/manifest.json"))
+    man = json.loads(man_path.read_text())
+    assert man["format_version"] == ckpt.FORMAT_VERSION
+    man["format_version"] = ckpt.FORMAT_VERSION + 1
+    man_path.write_text(json.dumps(man))
+    with pytest.raises(ValueError):
+        ckpt.restore(tmp_path, {"x": np.zeros(1)})
+
+
+def test_save_restore_serve_equivalence(tmp_path):
+    """Serving restored params == serving the in-memory trained params."""
+    g, pg = _pg()
+    model, tr = _trained(pg, g, tmp_path, epochs=4)
+    from_ckpt, _ = InferenceEngine.from_checkpoint(tmp_path, model, pg)
+    in_mem = InferenceEngine(model, pg,
+                             jax.tree.map(np.asarray, tr.state.params))
+    from_ckpt.full_sweep()
+    in_mem.full_sweep()
+    np.testing.assert_array_equal(from_ckpt._logits_host, in_mem._logits_host)
+
+
+# ---------------------------------------------------------------------------
+# request path: microbatching server + closed-loop load generator
+# ---------------------------------------------------------------------------
+def test_server_microbatching_matches_engine(tmp_path):
+    g, pg = _pg()
+    model, _ = _trained(pg, g, tmp_path, epochs=2)
+    eng, _ = InferenceEngine.from_checkpoint(tmp_path, model, pg)
+    eng.full_sweep()
+    srv = EmbeddingServer(eng, microbatch=8, max_queue=16)
+    reqs = [np.array([1, 2, 3]), np.array([4]), np.array([5, 6, 7, 8]),
+            np.array([9, 10])]
+    rids = [srv.submit(r) for r in reqs]
+    assert rids == [0, 1, 2, 3]
+    # first step packs requests 0+1+2 (3+1+4=8 ids); request 3 waits
+    out = srv.step()
+    assert [r.req_id for r in out] == [0, 1, 2]
+    out += srv.step()
+    assert [r.req_id for r in out] == [0, 1, 2, 3] and srv.depth == 0
+    for r, ids in zip(out, reqs):
+        np.testing.assert_array_equal(r.logits, eng.query(ids).logits)
+        assert r.latency_s >= 0
+
+    with pytest.raises(ValueError):
+        srv.submit(np.arange(9))          # oversize request
+    with pytest.raises(ValueError):
+        srv.submit([])
+
+
+def test_server_admission_queue_rejects(tmp_path):
+    g, pg = _pg()
+    model, _ = _trained(pg, g, tmp_path, epochs=1)
+    eng, _ = InferenceEngine.from_checkpoint(tmp_path, model, pg)
+    eng.full_sweep()
+    srv = EmbeddingServer(eng, microbatch=4, max_queue=2)
+    assert srv.submit([1]) is not None
+    assert srv.submit([2]) is not None
+    assert srv.submit([3]) is None        # admission control
+    assert srv.rejected == 1
+    assert len(srv.drain()) == 2
+    assert srv.submit([3]) is not None    # capacity freed
+
+
+def test_closed_loop_report_and_determinism(tmp_path):
+    g, pg = _pg()
+    model, _ = _trained(pg, g, tmp_path, epochs=2)
+    eng, _ = InferenceEngine.from_checkpoint(tmp_path, model, pg,
+                                             config=ServeConfig(bits=1))
+    eng.full_sweep()
+    rep = closed_loop(EmbeddingServer(eng), g.n_nodes, clients=4, batch=8,
+                      requests=40, seed=3, refresh_every=15, refresh_nodes=4)
+    assert rep["requests"] == 40
+    assert rep["qps"] > 0 and rep["p99_ms"] >= rep["p50_ms"] >= 0
+    assert rep["refreshes"] == 2 and rep["refresh_wire_bytes"] > 0
+    # the workload (not the wall clock) is seeded: byte-identical id streams
+    assert np.random.default_rng(3).integers(0, g.n_nodes, 8).tolist() \
+        == np.random.default_rng(3).integers(0, g.n_nodes, 8).tolist()
+
+
+def test_query_before_sweep_raises(tmp_path):
+    g, pg = _pg()
+    model, _ = _trained(pg, g, tmp_path, epochs=1)
+    eng, _ = InferenceEngine.from_checkpoint(tmp_path, model, pg)
+    with pytest.raises(RuntimeError):
+        eng.query([0])
+
+
+def test_refresh_before_sweep_escalates_to_full(tmp_path):
+    """A delta against zero-initialized caches would serve garbage; the first
+    refresh must run the full sweep instead."""
+    g, pg = _pg()
+    model, _ = _trained(pg, g, tmp_path, epochs=2)
+    a, _ = InferenceEngine.from_checkpoint(tmp_path, model, pg,
+                                           config=ServeConfig(bits=1))
+    b, _ = InferenceEngine.from_checkpoint(tmp_path, model, pg,
+                                           config=ServeConfig(bits=1))
+    rng = np.random.default_rng(2)
+    ids = rng.choice(g.n_nodes, 4, replace=False)
+    rows = rng.normal(0, 1, (4, g.x.shape[1])).astype(np.float32)
+    rep = a.refresh(ids, rows)               # no sweep ran yet
+    assert rep.kind == "full" and rep.forced
+    b.full_sweep()
+    b.refresh(ids, rows)
+    np.testing.assert_array_equal(a._logits_host, b._logits_host)
+
+
+# ---------------------------------------------------------------------------
+# shard_map parity (inline on >= 4 devices — the CI --serve lane — plus a
+# slow subprocess fallback)
+# ---------------------------------------------------------------------------
+SHARDMAP_SERVE = """
+import numpy as np, tempfile
+import repro.api as repro
+from repro.graph import synthetic
+from repro.models.gnn.models import GCN
+from repro.core.sylvie import SylvieConfig
+from repro.train.trainer import GNNTrainer
+from repro.serve import InferenceEngine, ServeConfig
+
+g = synthetic.planted_partition(n_nodes=300, d_feat=16, seed=0)
+pg = repro.partition(g, n_parts=4)
+model = GCN(16, 32, g.n_classes, n_layers=2)
+rt = repro.Runtime.from_mesh(repro.make_gnn_mesh(4))
+with tempfile.TemporaryDirectory() as td:
+    tr = GNNTrainer(model, pg, SylvieConfig(mode="sync", bits=1), ckpt_dir=td)
+    tr.fit(4); tr.save()
+    rng = np.random.default_rng(0)
+    ids = rng.choice(g.n_nodes, 5, replace=False)
+    rows = rng.normal(0, 1, (5, 16)).astype(np.float32)
+    for bits in (32, 1):
+        sim, _ = InferenceEngine.from_checkpoint(
+            td, model, pg, config=ServeConfig(bits=bits))
+        shd, _ = InferenceEngine.from_checkpoint(
+            td, model, pg, config=ServeConfig(bits=bits), runtime=rt)
+        sim.full_sweep(); shd.full_sweep()
+        assert np.array_equal(sim._logits_host, shd._logits_host), bits
+        ra, rb = sim.refresh(ids, rows), shd.refresh(ids, rows)
+        assert ra.kind == rb.kind == "delta"
+        assert ra.wire_bytes == rb.wire_bytes
+        assert np.array_equal(sim._logits_host, shd._logits_host), bits
+print("OK")
+"""
+
+
+def test_serve_shardmap_parity_inline():
+    """Runs when the session already has >= 4 devices (CI --serve lane)."""
+    if len(jax.devices()) < 4:
+        pytest.skip("needs >= 4 devices (XLA_FLAGS="
+                    "--xla_force_host_platform_device_count=4)")
+    exec(textwrap.dedent(SHARDMAP_SERVE), {})
+
+
+@pytest.mark.slow
+def test_serve_shardmap_parity_subprocess():
+    prog = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import sys; sys.path.insert(0, {SRC!r})
+    """) + textwrap.dedent(SHARDMAP_SERVE)
+    r = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                       text=True, timeout=600)
+    assert r.returncode == 0, r.stdout[-3000:] + r.stderr[-3000:]
+    assert "OK" in r.stdout

@@ -6,15 +6,19 @@
 #   tools/ci.sh --halo         halo-exchange parity tests with 4 forced host
 #                              devices (runs the shard_map compact/dense parity
 #                              checks in-process instead of skipping them)
-#   tools/ci.sh --bench-smoke  fast bench_halo regression check: fails if the
-#                              compact layout's wire-byte reduction regresses
-#                              past 60% (writes the untracked
-#                              BENCH_halo.smoke.json; only full runs of
-#                              `python -m benchmarks.bench_halo` update the
-#                              tracked BENCH_halo.json)
+#   tools/ci.sh --bench-smoke  fast benchmark regression checks: bench_halo
+#                              fails if the compact layout's wire-byte
+#                              reduction regresses past 60%; bench_serve fails
+#                              if the quantized delta refresh ships more than
+#                              10% of the full 32-bit sweep bytes (both write
+#                              untracked *.smoke.json; only full runs update
+#                              the tracked BENCH_*.json records)
 #   tools/ci.sh --policy       CommPolicy suite with 4 forced host devices
 #                              (runs the shard_map Uniform-parity check
 #                              in-process instead of skipping it)
+#   tools/ci.sh --serve        repro.serve suite with 4 forced host devices
+#                              (runs the shard_map serving-parity + delta
+#                              refresh checks in-process instead of skipping)
 #   tools/ci.sh --docs         documentation lane: markdown link check over
 #                              README/DESIGN/CHANGES + execution of every
 #                              README ```bash block (quickstart, scenario
@@ -35,9 +39,15 @@ case "${1:-}" in
       exec python -m pytest -x -q tests/test_halo_compact.py \
       tests/test_kernels.py -m "not slow" "$@"
     ;;
+  --serve)
+    shift
+    XLA_FLAGS="--xla_force_host_platform_device_count=4${XLA_FLAGS:+ $XLA_FLAGS}" \
+      exec python -m pytest -x -q tests/test_serve.py -m "not slow" "$@"
+    ;;
   --bench-smoke)
     shift
-    exec python -m benchmarks.bench_halo --smoke "$@"
+    python -m benchmarks.bench_halo --smoke "$@"
+    exec python -m benchmarks.bench_serve --smoke "$@"
     ;;
   --docs)
     shift
