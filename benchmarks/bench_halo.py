@@ -23,7 +23,6 @@ from pathlib import Path
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import quantization as qlib
 from repro.core.exchange import PlanArrays, exchange_bytes, wire_bytes
@@ -31,7 +30,9 @@ from repro.core.sylvie import quantized_halo
 from repro.graph import formats, partition, synthetic
 
 ROOT = Path(__file__).resolve().parents[1]
-KEY = jax.random.PRNGKey(0)
+def _key():
+    # built lazily: no device work at import time (lint RA104)
+    return jax.random.PRNGKey(0)
 
 
 def _timed(fn, *args, reps=5):
@@ -45,8 +46,8 @@ def _timed(fn, *args, reps=5):
 def _bench_layout(pg, d_feat, bits, reps):
     plan = PlanArrays.from_plan(pg.plan)
     p = plan.n_parts
-    h = jax.random.normal(KEY, (p, plan.n_local, d_feat), jnp.float32)
-    k1, k2 = jax.random.split(KEY)
+    h = jax.random.normal(_key(), (p, plan.n_local, d_feat), jnp.float32)
+    k1, k2 = jax.random.split(_key())
 
     @jax.jit
     def fwd(x):
@@ -79,11 +80,11 @@ def _bench_layout(pg, d_feat, bits, reps):
 
 
 def _bench_quantize(rows, d_feat, bits, reps):
-    h = jax.random.normal(KEY, (rows, d_feat), jnp.float32)
+    h = jax.random.normal(_key(), (rows, d_feat), jnp.float32)
     out = {}
     for impl in ("jnp", "pallas"):
         qfn = jax.jit(lambda x, impl=impl: qlib.dequantize(
-            qlib.quantize(x, bits, KEY, True, impl=impl), impl=impl))
+            qlib.quantize(x, bits, _key(), True, impl=impl), impl=impl))
         out[impl] = _timed(qfn, h, reps=reps)
     out["pallas_mode"] = ("compiled" if jax.default_backend() == "tpu"
                           else "interpret")

@@ -33,7 +33,6 @@ from repro import datasets
 from repro.models.gnn.models import PAPER_ARCHS
 from repro.serve import EmbeddingServer, InferenceEngine, ServeConfig
 from repro.serve.loadgen import closed_loop
-from repro.train import checkpoint as ckpt
 from repro.train.trainer import GNNTrainer
 from repro.core.sylvie import SylvieConfig
 

@@ -7,7 +7,6 @@ from __future__ import annotations
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import quantization as qlib
 from repro.core.exchange import exchange, gather_boundary

@@ -7,15 +7,13 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.sylvie import SylvieConfig
-from repro.graph import formats, partition, sampling, synthetic
+from repro.graph import formats, partition, sampling
 from repro.models.gnn import blocks as B
 from repro.models.gnn.models import GraphSAGE
 from repro.train import optimizer as opt
 from repro.train.gnn_step import GNNTrainState, make_gnn_steps
-from repro.train.trainer import GNNTrainer
 
 from . import common
 

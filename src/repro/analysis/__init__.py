@@ -1,0 +1,22 @@
+"""repro.analysis — static analysis for the repro stack.
+
+Two layers, one gate:
+
+* **AST lint** (``repro.analysis.lint``): repo-specific trace-discipline
+  rules (RA1xx) on stdlib ``ast`` — no third-party linter needed to run them.
+* **Jaxpr contracts** (``repro.analysis.contracts``): trace the real train /
+  eval / serve entry points and assert the lowered communication structure
+  (RC2xx) — collective census per ring bucket, wire dtypes, backward ring
+  inversion, recompile budgets, host-callback bans.
+
+``python -m repro.analysis`` runs both, applies the checked-in baseline
+(``tools/analysis_baseline.txt``), writes ``artifacts/analysis/report.json``
+with ``--json``, and exits non-zero on any non-baselined finding. CI runs it
+as ``tools/ci.sh --analysis``.
+"""
+from .lint import run_lint  # noqa: F401
+from .report import (Finding, load_baseline,  # noqa: F401
+                     split_by_baseline, write_report)
+
+__all__ = ["Finding", "load_baseline", "run_lint", "split_by_baseline",
+           "write_report"]

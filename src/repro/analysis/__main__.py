@@ -1,0 +1,89 @@
+"""``python -m repro.analysis`` — the exit-code-gated static-analysis gate.
+
+Runs the AST lint and (unless ``--lint-only``) the jaxpr contract suite,
+subtracts the checked-in baseline, prints fresh findings, and exits 1 if any
+remain. ``--json`` additionally writes ``artifacts/analysis/report.json``.
+
+The contract suite traces shard_map entry points, which need 4 devices; this
+entry point owns process startup, so it forces 4 host CPU devices itself
+(before jax initializes) instead of making every caller export XLA_FLAGS.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def _force_host_devices() -> None:
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + " --xla_force_host_platform_device_count=4").strip()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="jaxpr contract checks + trace-discipline lint")
+    ap.add_argument("paths", nargs="*", help="files/dirs to lint "
+                    "(default: src/repro benchmarks)")
+    ap.add_argument("--root", default=".", help="repo root (default: cwd)")
+    ap.add_argument("--baseline", default=None,
+                    help="accepted-debt file (default: "
+                    "tools/analysis_baseline.txt under --root)")
+    ap.add_argument("--lint-only", action="store_true",
+                    help="skip the jaxpr contract suite (no jax import — "
+                    "fast enough for a pre-commit hook)")
+    ap.add_argument("--contracts-only", action="store_true",
+                    help="skip the AST lint")
+    ap.add_argument("--json", action="store_true",
+                    help="write artifacts/analysis/report.json")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress per-finding output (exit code only)")
+    args = ap.parse_args(argv)
+
+    from .report import (DEFAULT_BASELINE, DEFAULT_REPORT_DIR, load_baseline,
+                         split_by_baseline, stale_baseline_entries,
+                         write_report)
+
+    findings, skipped, lanes = [], [], []
+    if not args.contracts_only:
+        from .lint import DEFAULT_PATHS, run_lint
+        findings.extend(run_lint(args.paths or DEFAULT_PATHS,
+                                 root=args.root))
+        lanes.append("lint")
+    if not args.lint_only:
+        _force_host_devices()
+        from .contracts import run_contracts
+        cfind, cskip = run_contracts()
+        findings.extend(cfind)
+        skipped.extend(cskip)
+        lanes.append("contracts")
+
+    baseline_path = args.baseline or os.path.join(args.root, DEFAULT_BASELINE)
+    baseline = load_baseline(baseline_path)
+    fresh, known = split_by_baseline(findings, baseline)
+    stale = stale_baseline_entries(findings, baseline)
+
+    if args.json:
+        out = write_report(
+            os.path.join(args.root, DEFAULT_REPORT_DIR, "report.json"),
+            findings, baseline, skipped, meta={"lanes": lanes})
+        if not args.quiet:
+            print(f"report: {out}")
+
+    if not args.quiet:
+        for f in sorted(fresh, key=lambda f: (f.code, f.where, f.line)):
+            print(f.render())
+        for note in skipped:
+            print(f"skipped: {note}")
+        for fp in stale:
+            print(f"stale baseline entry (fixed? delete it): {fp}")
+        print(f"analysis[{'+'.join(lanes)}]: {len(fresh)} finding(s), "
+              f"{len(known)} baselined, {len(skipped)} skipped")
+    return 1 if fresh else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

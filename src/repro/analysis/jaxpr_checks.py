@@ -1,0 +1,300 @@
+"""Structural checks on lowered jaxprs: collective census, wire dtypes, ring
+inversion, host-callback bans.
+
+The checks operate on :class:`JaxprSummary` — a recursive walk of a traced
+entry point (``jax.make_jaxpr`` output) that records every communication
+primitive with its operand shape/dtype and, for ``ppermute``, the cyclic ring
+shift its permutation implements. The contract layer (``contracts.py``)
+declares what each entry point *should* contain; this module measures and
+diffs.
+
+Why shifts + row counts: the compact halo layout ships ring bucket ``k``
+(``b_k`` rows) from partition ``p`` to ``(p+k) % P``; the backward
+communication must run the *inverted* rings (``shift P-k``). Because bucket
+sizes are ragged (skewed partitions), the multiset of ``(shift, rows)`` pairs
+is a fingerprint of the whole schedule: a missing bucket, an extra exchange,
+or a non-inverted backward pass each perturb it differently. The checks
+compare that fingerprint against the expectation computed from the plan's
+static metadata — nothing is learned from the jaxpr being checked.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Iterable, Optional
+
+from .report import Finding
+
+# Cross-device communication primitives (jaxpr names).
+EXCHANGE_PRIMS = ("ppermute", "all_to_all")
+REDUCE_PRIMS = ("psum", "psum_invariant", "pmax", "pmin")
+GATHER_PRIMS = ("all_gather", "all_gather_invariant", "pgather")
+# Host-callback / side-channel primitives banned inside hot entry points.
+CALLBACK_MARKERS = ("callback", "infeed", "outfeed", "host_local_array")
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveOp:
+    """One communication eqn: primitive, operand aval, ring shift (ppermute)."""
+
+    prim: str
+    dtype: str            # canonical dtype name, e.g. "uint8", "bfloat16"
+    shape: tuple[int, ...]
+    shift: Optional[int]  # cyclic ring shift for ppermute; None otherwise
+
+    @property
+    def rows(self) -> int:
+        """Halo rows moved: axis 1 of the stacked ``(P_local, rows, ...)``
+        buffer (falls back to the leading axis for 1-D operands)."""
+        return self.shape[1] if len(self.shape) > 1 else (
+            self.shape[0] if self.shape else 1)
+
+
+@dataclasses.dataclass
+class JaxprSummary:
+    """Everything the contracts need from one traced entry point."""
+
+    prim_counts: collections.Counter
+    collectives: list[CollectiveOp]
+    callbacks: list[str]
+
+    def count(self, prim: str) -> int:
+        return self.prim_counts[prim]
+
+    def ops(self, *prims: str) -> list[CollectiveOp]:
+        return [c for c in self.collectives if c.prim in prims]
+
+
+def cyclic_shift(perm: Iterable[tuple[int, int]]) -> Optional[int]:
+    """The constant ``(dst - src) % P`` when ``perm`` is a full cyclic shift
+    over P members; ``None`` for anything else (partial/irregular perms)."""
+    pairs = sorted(perm)
+    p = len(pairs)
+    if p == 0 or [src for src, _ in pairs] != list(range(p)):
+        return None
+    shifts = {(dst - src) % p for src, dst in pairs}
+    return shifts.pop() if len(shifts) == 1 else None
+
+
+def _sub_jaxprs(params: dict):
+    for v in params.values():
+        vs = v if isinstance(v, (list, tuple)) else (v,)
+        for j in vs:
+            if hasattr(j, "eqns"):          # Jaxpr
+                yield j
+            elif hasattr(j, "jaxpr"):       # ClosedJaxpr
+                yield j.jaxpr
+
+
+def summarize(closed_jaxpr) -> JaxprSummary:
+    """Recursively walk a (Closed)Jaxpr; collect primitive counts, collective
+    ops, and callback sightings. Call primitives (pjit, shard_map, custom_vjp,
+    scan, cond, ...) are traversed through their sub-jaxpr params."""
+    counts: collections.Counter = collections.Counter()
+    collectives: list[CollectiveOp] = []
+    callbacks: list[str] = []
+    jaxpr = getattr(closed_jaxpr, "jaxpr", closed_jaxpr)
+    stack = [jaxpr]
+    while stack:
+        jx = stack.pop()
+        for eq in jx.eqns:
+            name = eq.primitive.name
+            counts[name] += 1
+            if any(m in name for m in CALLBACK_MARKERS):
+                callbacks.append(name)
+            if name in EXCHANGE_PRIMS + REDUCE_PRIMS + GATHER_PRIMS:
+                shift = None
+                if name == "ppermute":
+                    shift = cyclic_shift(eq.params.get("perm", ()))
+                for v in eq.invars:
+                    aval = v.aval
+                    collectives.append(CollectiveOp(
+                        prim=name, dtype=getattr(aval.dtype, "name",
+                                                 str(aval.dtype)),
+                        shape=tuple(aval.shape), shift=shift))
+            stack.extend(_sub_jaxprs(eq.params))
+    return JaxprSummary(prim_counts=counts, collectives=collectives,
+                        callbacks=callbacks)
+
+
+# ---------------------------------------------------------------------------
+# expectations
+# ---------------------------------------------------------------------------
+def quant_components(bits: int) -> int:
+    """Arrays per quantized exchange: packed payload + scale + zero for real
+    quantization; passthrough widths (16/32) ship the payload alone."""
+    return 1 if bits >= 16 else 3
+
+
+@dataclasses.dataclass(frozen=True)
+class ExchangeExpectation:
+    """Declared communication structure of one traced entry point.
+
+    ``fwd_ops``/``bwd_ops`` count *logical halo exchanges* (one per live
+    exchange site per direction); each op moves :func:`quant_components`
+    arrays. ``mask_ops`` are the serving path's unquantized affected-mask
+    rides (1 array each, forward direction). ``buckets`` is the compact
+    layout's static ragged bucket-size tuple, ``None`` for the dense layout.
+    ``psums`` is the exact all-reduce count (``None`` = don't check).
+    """
+
+    fwd_ops: int
+    bwd_ops: int
+    bits: int
+    buckets: Optional[tuple[int, ...]]
+    mask_ops: int = 0
+    psums: Optional[int] = None
+    wire_dtypes: frozenset = frozenset({"uint8", "bfloat16"})
+
+    @property
+    def comps(self) -> int:
+        return quant_components(self.bits)
+
+
+def expected_shift_census(exp: ExchangeExpectation
+                          ) -> collections.Counter:
+    """Multiset of (shift, rows) a compact-layout entry point must produce.
+
+    Forward ops ship bucket ``k`` (``b_k`` rows) at shift ``k``; backward ops
+    run the inverted rings — bucket ``k``'s rows at shift ``P - k``. The
+    diagonal bucket (k=0) and empty buckets never hit the wire.
+    """
+    assert exp.buckets is not None
+    p = len(exp.buckets)
+    census: collections.Counter = collections.Counter()
+    fwd_arrays = exp.fwd_ops * exp.comps + exp.mask_ops
+    bwd_arrays = exp.bwd_ops * exp.comps
+    for k, b in enumerate(exp.buckets):
+        if k == 0 or not b:
+            continue
+        census[(k, b)] += fwd_arrays
+        census[((p - k) % p, b)] += bwd_arrays
+    return census
+
+
+def check_exchange_census(summary: JaxprSummary, exp: ExchangeExpectation,
+                          where: str) -> list[Finding]:
+    """Collective census + ring-inversion check for one entry point."""
+    out = []
+
+    def bad(code, msg):
+        out.append(Finding(code=code, where=where, message=msg))
+
+    n_pp = summary.count("ppermute")
+    n_a2a = summary.count("all_to_all")
+    n_gather = sum(summary.count(p) for p in GATHER_PRIMS)
+    if n_gather:
+        bad("RC201", f"{n_gather} all_gather-family collective(s) — the halo "
+            "exchange must never gather globally (wire cost P x payload)")
+
+    if exp.buckets is not None:
+        # compact: one ppermute per non-empty ring bucket per shipped array
+        if n_a2a:
+            bad("RC201", f"{n_a2a} all_to_all op(s) in a compact-layout entry "
+                "point — ring buckets must lower to ppermute only")
+        want = expected_shift_census(exp)
+        got: collections.Counter = collections.Counter()
+        for op in summary.ops("ppermute"):
+            if op.shift is None:
+                bad("RC203", "ppermute permutation is not a cyclic ring shift")
+                continue
+            got[(op.shift, op.rows)] += 1
+        if got != want:
+            missing = {k: v for k, v in (want - got).items()}
+            extra = {k: v for k, v in (got - want).items()}
+            detail = []
+            if missing:
+                detail.append(f"missing (shift, rows) ops {missing}")
+            if extra:
+                detail.append(f"unexpected {extra}")
+            # a pure fwd<->bwd swap is specifically a ring-inversion bug
+            code = "RC203" if _is_inversion_miss(want, got) else "RC201"
+            bad(code, "ppermute census mismatch — expected "
+                f"{exp.fwd_ops} fwd + {exp.bwd_ops} bwd ops x {exp.comps} "
+                f"arrays (+{exp.mask_ops} mask) over buckets "
+                f"{exp.buckets}: " + "; ".join(detail))
+    else:
+        # dense: one tiled all_to_all per shipped array, no ppermute
+        if n_pp:
+            bad("RC201", f"{n_pp} ppermute op(s) in a dense-layout entry "
+                "point — pairwise blocks must lower to one tiled all_to_all")
+        want_a2a = (exp.fwd_ops + exp.bwd_ops) * exp.comps + exp.mask_ops
+        if n_a2a != want_a2a:
+            bad("RC201", f"all_to_all census mismatch: expected {want_a2a} "
+                f"({exp.fwd_ops} fwd + {exp.bwd_ops} bwd ops x {exp.comps} "
+                f"arrays + {exp.mask_ops} mask), found {n_a2a}")
+
+    if exp.psums is not None:
+        n_psum = sum(summary.count(p) for p in REDUCE_PRIMS)
+        if n_psum != exp.psums:
+            bad("RC201", f"psum census mismatch: expected exactly "
+                f"{exp.psums} (weight-grad leaves + loss + telemetry), "
+                f"found {n_psum} — a stray all-reduce silently multiplies "
+                "gradient sync cost")
+    return out
+
+
+def _is_inversion_miss(want: collections.Counter,
+                       got: collections.Counter) -> bool:
+    """True when ``got`` is ``want`` with some shifts un-inverted (k vs P-k
+    confusion) — same totals per rows-class, wrong directions."""
+    if sum(want.values()) != sum(got.values()):
+        return False
+
+    def by_rows(c):
+        out = collections.Counter()
+        for (_, rows), n in c.items():
+            out[rows] += n
+        return out
+
+    return by_rows(want) == by_rows(got) and want != got
+
+
+def check_wire_dtypes(summary: JaxprSummary, exp: ExchangeExpectation,
+                      where: str) -> list[Finding]:
+    """Every cross-device exchange operand must be a wire-cheap dtype.
+
+    For quantized entry points (bits <= 8) that is uint8 payload + the
+    scale_dtype error compensation — **never** fp32: an fp32 operand means
+    dequantized data crossed the wire and the one-bit claim is void. The
+    reduce family (psum of losses/grads/stats) is exempt — gradient sync is
+    full-precision by design (EF21 is its own, separately-audited path).
+    """
+    out = []
+    for op in summary.ops(*EXCHANGE_PRIMS):
+        if op.dtype not in exp.wire_dtypes:
+            out.append(Finding(
+                code="RC202", where=where,
+                message=f"{op.prim} ships {op.dtype}{list(op.shape)} but this "
+                f"entry point is contracted to {sorted(exp.wire_dtypes)} — "
+                "a full-precision operand on a quantized exchange leaks "
+                "dequantized data onto the wire"))
+    return out
+
+
+def check_no_callbacks(summary: JaxprSummary, where: str) -> list[Finding]:
+    """Hot entry points must not lower host callbacks (pure_callback,
+    io_callback, debug prints, infeed/outfeed): each one stalls the device
+    pipeline and breaks async dispatch."""
+    if not summary.callbacks:
+        return []
+    return [Finding(
+        code="RC205", where=where,
+        message=f"host callback primitive(s) {sorted(set(summary.callbacks))} "
+        "inside a hot entry point — host round-trips are banned on the "
+        "train/serve path")]
+
+
+def check_no_collectives(summary: JaxprSummary, where: str) -> list[Finding]:
+    """Simulated-backend entry points run the whole stack in one program:
+    any collective primitive means backend dispatch leaked."""
+    found = {p: summary.count(p)
+             for p in EXCHANGE_PRIMS + REDUCE_PRIMS + GATHER_PRIMS
+             if summary.count(p)}
+    if not found:
+        return []
+    return [Finding(
+        code="RC201", where=where,
+        message=f"collective primitives {found} in a simulated-backend entry "
+        "point — the stacked reference semantics must compile to pure "
+        "array ops")]

@@ -23,7 +23,6 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..dist.backend import as_backend
 from .quantization import QuantizedTensor

@@ -51,7 +51,7 @@ import jax.numpy as jnp
 from ..dist.backend import as_backend
 from ..policy.base import SiteDecision
 from . import quantization as qlib
-from .exchange import (PlanArrays, exchange_halo, exchange_quantized_halo,
+from .exchange import (PlanArrays, exchange_quantized_halo,
                        gather_boundary, scatter_boundary_grad)
 
 Mode = str  # "vanilla" | "sync" | "async"

@@ -94,9 +94,10 @@ class HaloBackend(Protocol):
 
     def axis_index(self) -> Optional[jax.Array]: ...
 
-    def device_put(self, tree, spec=None): ...
+    def device_put(self, tree: Any, spec: Optional[P] = None) -> Any: ...
 
-    def shard(self, fn, in_specs=None, out_specs=None): ...
+    def shard(self, fn: Any, in_specs: Any = None,
+              out_specs: Any = None) -> Any: ...
 
 
 def _exchange_quantized(exch, qt: "QuantizedTensor") -> "QuantizedTensor":
@@ -162,11 +163,12 @@ class SimulatedBackend:
     def axis_index(self) -> None:
         return None
 
-    def device_put(self, tree, spec=None):
+    def device_put(self, tree: Any, spec: Optional[P] = None) -> Any:
         del spec  # single device — nothing to shard
         return tree
 
-    def shard(self, fn, in_specs=None, out_specs=None):
+    def shard(self, fn: Any, in_specs: Any = None,
+              out_specs: Any = None) -> Any:
         del in_specs, out_specs
         return jax.jit(fn)
 
@@ -256,12 +258,13 @@ class ShardMapBackend:
         if self.mesh is None:
             raise ValueError(f"{what} needs a mesh-backed ShardMapBackend")
 
-    def device_put(self, tree, spec=None):
+    def device_put(self, tree: Any, spec: Optional[P] = None) -> Any:
         self._require_mesh("device_put")
         spec = P() if spec is None else spec
         return jax.device_put(tree, NamedSharding(self.mesh, spec))
 
-    def shard(self, fn, in_specs=None, out_specs=None):
+    def shard(self, fn: Any, in_specs: Any = None,
+              out_specs: Any = None) -> Any:
         # check=False: replication inference cannot see through the quantized
         # custom_vjp exchanges, so the steps reduce weight gradients with an
         # explicit self.psum (Alg. 2 line 16) instead of a boundary check.
@@ -270,7 +273,7 @@ class ShardMapBackend:
                                         out_specs=out_specs, check=False))
 
 
-def as_backend(b) -> HaloBackend:
+def as_backend(b: Any) -> HaloBackend:
     """Normalize legacy communicator designators to a backend.
 
     ``None`` -> :class:`SimulatedBackend`; an axis name (or tuple of names) ->

@@ -35,11 +35,9 @@ def run_cell(arch: str, shape: str, mesh_kind: str, out_dir: Path,
              sylvie_mode: str = "sync", bits: int = 1, tag: str = "",
              save_hlo: bool = False, attn_remat: bool = False,
              dlrm_qbits=None) -> dict:
-    import jax
-
     from . import cells as cellslib
     from . import hlo as hlolib
-    from .mesh import make_production_mesh, n_devices
+    from .mesh import make_production_mesh
 
     t0 = time.time()
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))

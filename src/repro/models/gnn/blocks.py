@@ -18,7 +18,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from ...core.exchange import PlanArrays
-from ...graph import formats
 from ...graph.partition import PartitionedGraph, PartitionShapeSpec
 from . import so3
 

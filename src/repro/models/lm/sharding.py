@@ -21,8 +21,6 @@ flash-decoding split, derived by GSPMD instead of hand-written collectives.
 """
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 from jax.sharding import PartitionSpec as P
 

@@ -48,6 +48,11 @@ from ..policy.base import EpochDecision, validate_decision
 from ..train import checkpoint as ckpt
 from . import delta as deltalib
 
+# Trace instrumentation, mirroring train.gnn_step.TRACE_LOG: the sweep body
+# appends once per jit trace. repro.analysis (RC204/RC207) counts entries to
+# verify the single-sweep-executable guarantee instead of trusting it.
+TRACE_LOG: list[str] = []
+
 
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
@@ -101,11 +106,13 @@ class ServeComm(SylvieComm):
             impl=cfg.quant_impl)
         fresh = jnp.where(self.plan.recv_mask[..., None], fresh, 0)
         # which received rows are fresh = the senders' affected masks, moved
-        # through the same exchange (1 float per row; the wire-accounting
-        # charges the 1-bit-per-row bitmap this stands in for)
-        aff = exchange_halo(self.send_affected[i][..., None], self.plan,
-                            self.backend)
-        halo = jnp.where(aff > 0.5, fresh, self.cached_halos[i])
+        # through the same exchange as a uint8 bitmap (never fp32 on the
+        # wire: the analysis wire-dtype audit, RC202, holds this path to the
+        # same low-bit contract as the payload)
+        aff = exchange_halo(
+            self.send_affected[i][..., None].astype(jnp.uint8),
+            self.plan, self.backend)
+        halo = jnp.where(aff > 0, fresh, self.cached_halos[i])
         self.new_feat_caches.append(halo)
         return halo
 
@@ -196,6 +203,7 @@ class InferenceEngine:
         backend = self.runtime.backend
 
         def sweep_fn(params, block, x, halos, masks, key):
+            TRACE_LOG.append("sweep")
             comm = ServeComm(scfg, block.plan, key, backend, decision,
                              cached_halos=halos, send_affected=masks)
             logits = model.apply(params, block, x, comm)

@@ -26,8 +26,6 @@ byte accounting.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

@@ -33,7 +33,6 @@ estimate state lives in ``state.ef``.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Optional
 
 import jax

@@ -5,8 +5,7 @@ experiments (matching common GCN/SAGE/GAT setups) and AdamW for LM configs.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp

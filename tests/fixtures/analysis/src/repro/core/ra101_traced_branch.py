@@ -1,0 +1,9 @@
+# ruff: noqa
+"""Planted RA101: python control flow branching on a traced expression."""
+import jax.numpy as jnp
+
+
+def scale(h):
+    if jnp.max(h) > 1.0:          # RA101: traced value in python `if`
+        h = h / jnp.max(h)
+    return h

@@ -1,0 +1,10 @@
+# ruff: noqa
+"""Planted RA102: jit static arg with an unhashable (list) default."""
+from functools import partial
+
+import jax
+
+
+@partial(jax.jit, static_argnums=(1,))
+def apply(x, widths=[64, 32]):    # RA102: static arg defaults to a list
+    return x * len(widths)

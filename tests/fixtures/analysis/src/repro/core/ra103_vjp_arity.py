@@ -1,0 +1,26 @@
+# ruff: noqa
+"""Planted RA103: custom_vjp bwd returns the wrong cotangent arity.
+
+``halo(x, y, plan, bits)`` with nondiff (2, 3) has two differentiable
+primals, so bwd must return a 2-tuple; it returns 3.
+"""
+from functools import partial
+
+import jax
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def halo(x, y, plan, bits):
+    return x + y
+
+
+def halo_fwd(x, y, plan, bits):
+    return x + y, (x, y)
+
+
+def halo_bwd(plan, bits, res, g):
+    x, y = res
+    return (g, g, None)           # RA103: 3-tuple, needs 2 cotangents
+
+
+halo.defvjp(halo_fwd, halo_bwd)

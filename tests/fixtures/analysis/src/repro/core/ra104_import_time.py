@@ -1,0 +1,9 @@
+# ruff: noqa
+"""Planted RA104: JAX device work at import time."""
+import jax.numpy as jnp
+
+IDENTITY = jnp.eye(4)             # RA104: allocates on import
+
+
+def apply(x):
+    return IDENTITY @ x

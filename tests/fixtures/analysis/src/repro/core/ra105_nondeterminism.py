@@ -1,0 +1,7 @@
+# ruff: noqa
+"""Planted RA105: wall-clock nondeterminism inside a traced module."""
+import time
+
+
+def noisy_scale(h):
+    return h * (time.time() % 1.0)   # RA105: frozen at trace time

@@ -1,0 +1,6 @@
+# ruff: noqa
+"""Planted RA106: host synchronization inside a traced module."""
+
+
+def loss_scalar(loss):
+    return loss.item()            # RA106: device sync in a hot path

@@ -1,0 +1,7 @@
+# ruff: noqa
+"""Planted RA107: unused import."""
+import os
+
+
+def double(x):
+    return 2 * x

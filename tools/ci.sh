@@ -24,6 +24,13 @@
 #                              README ```bash block (quickstart, scenario
 #                              smoke, fast verify) via tools/check_docs.py.
 #                              `--docs --links-only` skips the executions.
+#   tools/ci.sh --analysis     static-analysis gate: `python -m repro.analysis`
+#                              (trace-discipline AST lint + jaxpr contract
+#                              suite, baseline-gated, JSON report to
+#                              artifacts/analysis/), then ruff + mypy when
+#                              installed (CI installs them; locally they are
+#                              skipped with a notice, never silently passed
+#                              as success of the repro.analysis gate).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -52,6 +59,21 @@ case "${1:-}" in
   --docs)
     shift
     exec python tools/check_docs.py "$@"
+    ;;
+  --analysis)
+    shift
+    python -m repro.analysis --json "$@"
+    if command -v ruff >/dev/null 2>&1; then
+      ruff check src tests benchmarks tools
+    else
+      echo "ruff not installed - skipping (CI installs it; pip install ruff)"
+    fi
+    if command -v mypy >/dev/null 2>&1; then
+      mypy --config-file pyproject.toml
+    else
+      echo "mypy not installed - skipping (CI installs it; pip install mypy)"
+    fi
+    exit 0
     ;;
 esac
 exec python -m pytest -x -q "$@"
