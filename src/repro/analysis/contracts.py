@@ -15,7 +15,10 @@ Covered entry points (acceptance matrix):
 * the serve sweep (quantized forward + uint8 affected-mask rides);
 * the quantize kernel's payload dtypes across the whole bit lattice (RC206);
 * recompile budgets: train executables per lattice decision (RC204) and the
-  serve single-sweep-executable guarantee from PR 6 (RC207).
+  serve single-sweep-executable guarantee from PR 6 (RC207);
+* fault-injection transparency: with ``faults=None`` a FaultyBackend-built
+  step traces the *identical* program as the plain backend, and two armed
+  epochs with different fault masks share one jaxpr (RC208).
 
 shard_map contracts need >= 4 devices; with fewer they are *reported as
 skipped*, never silently passed (``python -m repro.analysis`` sets
@@ -299,6 +302,61 @@ def contract_serve_one_executable() -> tuple[list[Finding], list[str]]:
     return findings, []
 
 
+def contract_fault_transparency() -> tuple[list[Finding], list[str]]:
+    """RC208: fault injection must be invisible to the compiler. Two halves:
+
+    (a) fault-free transparency — a train step built against a
+        ``FaultyBackend`` wrapper, invoked with ``faults=None``, traces a
+        jaxpr *string-identical* to the plain-backend step (zero extra traced
+        executables when no chaos is armed);
+    (b) masks-as-data — the armed step traces the same jaxpr for two epochs
+        with *different* fault sets (the masks ride in
+        ``GNNTrainState.faults``; fault values never shape the program).
+    """
+    import dataclasses
+    import re
+
+    from ..faults import FaultCtl, FaultPlan, FaultyBackend, RowGeometry
+
+    def canon(fn, st):
+        # jaxpr pretty-printing embeds repr()s of custom_vjp thunks, which
+        # carry object addresses; strip them so only structure is compared.
+        return re.sub(r"0x[0-9a-f]+", "0x", str(jax.make_jaxpr(fn)(st, *args)))
+
+    where = "contract:fault_transparency"
+    model, pg, opt, state, args = _workload("gcn", "compact")
+    rt = Runtime.simulated(N_PARTS)
+    plan = FaultPlan(seed=3, drop_rate=0.2, corrupt_rate=0.1)
+    faulty = FaultyBackend(rt.backend, plan)
+    findings: list[Finding] = []
+    for mode in ("sync", "async"):
+        cfg = SylvieConfig(mode=mode, bits=1, stochastic=False)
+        ts_p, ta_p, _ = make_gnn_steps(model, cfg, opt, backend=rt.backend)
+        ts_f, ta_f, _ = make_gnn_steps(model, cfg, opt, backend=faulty)
+        step_p = ts_p if mode == "sync" else ta_p
+        step_f = ts_f if mode == "sync" else ta_f
+        if canon(step_p, state) != canon(step_f, state):
+            findings.append(Finding(
+                code="RC208", where=f"{where}/{mode}",
+                message="FaultyBackend with faults=None traces a different "
+                "program than the plain backend — the fault path leaks into "
+                "the fault-free trace"))
+        # (b) two different armed epochs must share one jaxpr
+        geom = RowGeometry.from_plan(args[0].plan)
+        n_sites = len(model.comm_dims())
+        ctls = [FaultCtl.expand(plan.events(e, n_sites, N_PARTS), geom,
+                                n_sites) for e in (1, 2)]
+        traces = [canon(step_f, dataclasses.replace(state, faults=c))
+                  for c in ctls]
+        if traces[0] != traces[1]:
+            findings.append(Finding(
+                code="RC208", where=f"{where}/{mode}/armed",
+                message="two epochs with different fault masks trace "
+                "different jaxprs — fault events are shaping program "
+                "structure instead of riding as data"))
+    return findings, []
+
+
 # ---------------------------------------------------------------------------
 # registry + driver
 # ---------------------------------------------------------------------------
@@ -315,6 +373,7 @@ CONTRACTS: dict[str, Callable[[], tuple[list[Finding], list[str]]]] = {
     "quantize_payload": contract_quantize_payload,
     "recompile_budget/train": contract_recompile_budget,
     "serve_one_executable": contract_serve_one_executable,
+    "fault_transparency": contract_fault_transparency,
 }
 
 

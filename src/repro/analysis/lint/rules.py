@@ -43,6 +43,8 @@ from ..report import Finding
 TRACED_MODULES = (
     "src/repro/core/",
     "src/repro/kernels/",
+    "src/repro/faults/comm.py",
+    "src/repro/faults/wire.py",
     "src/repro/train/gnn_step.py",
     "src/repro/train/compression.py",
     "src/repro/train/optimizer.py",

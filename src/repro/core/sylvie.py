@@ -189,7 +189,8 @@ class SylvieComm:
 
     def __init__(self, cfg: SylvieConfig, plan: PlanArrays, key,
                  backend=None, decision=None, collect_stats=False,
-                 feat_caches=None, grad_ins=None, gslots=None):
+                 feat_caches=None, grad_ins=None, gslots=None,
+                 fault_sites=None):
         self.cfg = cfg
         self.plan = plan
         self.key = key
@@ -199,6 +200,9 @@ class SylvieComm:
         self.feat_caches = feat_caches
         self.grad_ins = grad_ins
         self.gslots = gslots
+        # per-site fault masks (repro.faults.plan.SiteFaults tuple) riding as
+        # data; None = fault-free, traces the exact legacy program.
+        self.fault_sites = fault_sites
         self.new_feat_caches: list = []
         self.site_stats: list = []
         self._site = 0
@@ -247,10 +251,23 @@ class SylvieComm:
         kf = jax.random.fold_in(key, 2 * i)
         kb = jax.random.fold_in(key, 2 * i + 1)
         self._record_stats(h)
+        sf = self.fault_sites[i] if self.fault_sites is not None else None
+        if sf is not None:
+            # lazy import: repro.core.__init__ imports this module, and
+            # repro.faults.comm imports repro.core — a module-level import
+            # here would cycle.
+            from ..faults import comm as fcomm
         if cfg.mode in ("vanilla", "sync"):
-            halo = quantized_halo(h, self.plan, kf, kb, sd.fwd_bits,
-                                  sd.bwd_bits, sd.stochastic, cfg.scale_dtype,
-                                  self.backend, cfg.quant_impl)
+            if sf is not None:
+                halo = fcomm.faulty_quantized_halo(
+                    h, self.feat_caches[i], sf, self.plan, kf, kb,
+                    sd.fwd_bits, sd.bwd_bits, sd.stochastic, cfg.scale_dtype,
+                    self.backend, cfg.quant_impl)
+            else:
+                halo = quantized_halo(h, self.plan, kf, kb, sd.fwd_bits,
+                                      sd.bwd_bits, sd.stochastic,
+                                      cfg.scale_dtype, self.backend,
+                                      cfg.quant_impl)
             bns = self._bns_mask(jax.random.fold_in(key, 999),
                                  sd.boundary_sample_p)
             if bns is not None:
@@ -260,6 +277,15 @@ class SylvieComm:
             self.new_feat_caches.append(halo)
             return halo
         # async: consume stale, emit fresh
+        if sf is not None:
+            halo = fcomm.faulty_stale_halo(
+                h, self.feat_caches[i], self.grad_ins[i], self.gslots[i], sf,
+                self.plan, kb, sd.bwd_bits, sd.stochastic, cfg.scale_dtype,
+                self.backend, cfg.quant_impl)
+            self.new_feat_caches.append(fcomm.faulty_fresh_halo(
+                h, self.feat_caches[i], sf, self.plan, kf, sd.fwd_bits,
+                sd.stochastic, cfg.scale_dtype, self.backend, cfg.quant_impl))
+            return halo
         halo = stale_halo(h, self.feat_caches[i], self.grad_ins[i], self.gslots[i],
                           self.plan, kb, sd.bwd_bits, sd.stochastic,
                           cfg.scale_dtype, self.backend, cfg.quant_impl)

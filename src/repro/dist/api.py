@@ -72,7 +72,11 @@ def gnn_state_specs(state, axes) -> Any:
     deterministic on the already-reduced gradient; the stats are reduced
     inside the step)."""
     return type(state)(params=P(), opt_state=P(), halo=P(axes), step=P(),
-                       ef=P(), site_stats=P())
+                       ef=P(), site_stats=P(),
+                       # fault masks are (P, rows) wire masks — stacked like
+                       # the halo buffers they condemn; None stays None (the
+                       # fault-free structure).
+                       faults=None if state.faults is None else P(axes))
 
 
 def gnn_block_spec(axes) -> P:
@@ -144,7 +148,9 @@ def device_put_gnn(mesh, state, block, arrays=()):
         halo=backend.device_put(state.halo, sharded),
         step=backend.device_put(state.step, rep),
         ef=backend.device_put(state.ef, rep),
-        site_stats=backend.device_put(state.site_stats, rep))
+        site_stats=backend.device_put(state.site_stats, rep),
+        faults=(None if state.faults is None
+                else backend.device_put(state.faults, sharded)))
     block_d = backend.device_put(block, sharded)
     arrays_d = tuple(backend.device_put(a, sharded) for a in arrays)
     return state_d, block_d, arrays_d

@@ -1,0 +1,28 @@
+"""repro.faults — seeded fault injection and staleness-as-recovery.
+
+Scheduling (`plan`) is host-side and deterministic in (seed, epoch);
+injection (`wire`, `comm`) is traced data so chaos adds zero executables;
+`backend.FaultyBackend` binds a plan to any HaloBackend.
+"""
+from .backend import FaultyBackend
+from .comm import faulty_fresh_halo, faulty_quantized_halo, faulty_stale_halo
+from .plan import (BWD, FWD, FaultCtl, FaultEvents, FaultPlan, RowGeometry,
+                   SiteFaults)
+from .wire import checked_exchange, flip_rows, row_checksum
+
+__all__ = [
+    "BWD",
+    "FWD",
+    "FaultCtl",
+    "FaultEvents",
+    "FaultPlan",
+    "FaultyBackend",
+    "RowGeometry",
+    "SiteFaults",
+    "checked_exchange",
+    "faulty_fresh_halo",
+    "faulty_quantized_halo",
+    "faulty_stale_halo",
+    "flip_rows",
+    "row_checksum",
+]

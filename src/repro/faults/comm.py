@@ -1,0 +1,144 @@
+"""Fault-tolerant halo communication: staleness-as-recovery variants.
+
+These mirror the three primitives of ``core/sylvie.py`` —
+``quantized_halo`` / ``fresh_halo`` / ``stale_halo`` — with two changes and
+no others:
+
+* every quantized exchange goes through ``wire.checked_exchange`` (per-row
+  checksum, injected corruption/drops from a :class:`~repro.faults.plan.SiteFaults`
+  mask block that rides as *data*);
+* a condemned row (dropped or checksum-failed) falls back to the staleness
+  contract instead of crashing or silently dequantizing garbage:
+
+  - forward features: keep the previous step's cached halo row
+    (``feat_cache``) — an unintentional Sylvie-A step for that row;
+  - backward gradients, sync step: a dropped returned-gradient row
+    contributes zero — exactly what the synchronous step's drained grad
+    cache holds for every row;
+  - backward gradients, async step: a dropped row keeps the previous
+    in-flight ``grad_in`` row — one epoch staler, still bounded-stale.
+
+With all-false masks every blend reduces to the legacy expression
+(``where(True & recv, fresh, cache)`` on rows the legacy path also fills, 0
+elsewhere), so a clean :class:`~repro.faults.plan.FaultCtl` is bit-identical
+to the untouched primitives — tested, and the reason the legacy custom_vjps
+stay byte-for-byte unmodified.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..core import quantization as qlib
+from ..core.exchange import (PlanArrays, gather_boundary,
+                             scatter_boundary_grad)
+from .wire import checked_exchange
+
+
+# ---------------------------------------------------------------------------
+# Sylvie-S under faults: blend with the cache wherever the wire failed
+# ---------------------------------------------------------------------------
+@partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8, 9, 10, 11))
+def faulty_quantized_halo(h, feat_cache, sf, plan: PlanArrays, fwd_key,
+                          bwd_key, fwd_bits: int, bwd_bits: int,
+                          stochastic: bool, scale_dtype, backend, impl):
+    """``quantized_halo`` with checksummed exchange and stale fallback.
+
+    ``feat_cache`` is the previous step's halo for this site (the row-level
+    fallback); ``sf`` the site's fault masks. Both are data — no cotangents
+    (the cache is already stop-gradient'd by the caller's step)."""
+    buf = gather_boundary(h, plan)
+    qt = qlib.quantize(buf, fwd_bits, fwd_key, stochastic, scale_dtype,
+                       impl=impl)
+    qr, ok = checked_exchange(qt, plan, backend, sf.corrupt_fwd, sf.drop_fwd)
+    fresh = qlib.dequantize(qr, impl=impl)
+    # single blend: outside recv_mask the condition is False and the cache is
+    # zero there by construction (caches start zero and are only ever written
+    # by these recv-masked outputs), so no extra zeroing pass is needed —
+    # arming must stay inside the <= 5% step-overhead budget (bench_chaos).
+    return jnp.where((ok & plan.recv_mask)[..., None], fresh, feat_cache)
+
+
+def _fqh_fwd(h, feat_cache, sf, plan, fwd_key, bwd_key, fwd_bits, bwd_bits,
+             stochastic, scale_dtype, backend, impl):
+    out = faulty_quantized_halo(h, feat_cache, sf, plan, fwd_key, bwd_key,
+                                fwd_bits, bwd_bits, stochastic, scale_dtype,
+                                backend, impl)
+    return out, (plan, bwd_key, sf)
+
+
+def _fqh_bwd(fwd_bits, bwd_bits, stochastic, scale_dtype, backend, impl, res,
+             g):
+    plan, bwd_key, sf = res
+    g = jnp.where(plan.recv_mask[..., None], g, 0)
+    qt = qlib.quantize(g, bwd_bits, bwd_key, stochastic, scale_dtype,
+                       impl=impl)
+    qr, ok = checked_exchange(qt, plan, backend, sf.corrupt_bwd, sf.drop_bwd,
+                              reverse=True)
+    back = qlib.dequantize(qr, impl=impl)
+    # a lost returned-gradient row contributes zero — the synchronous step's
+    # grad caches are drained (all-zero), so zero *is* its stale value
+    back = jnp.where((ok & plan.send_mask)[..., None], back, 0)
+    grad_h = scatter_boundary_grad(back, plan)
+    return (grad_h, None, None, None, None, None)
+
+
+faulty_quantized_halo.defvjp(_fqh_fwd, _fqh_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Sylvie-A under faults
+# ---------------------------------------------------------------------------
+def faulty_fresh_halo(h, old_cache, sf, plan: PlanArrays, key, fwd_bits,
+                      stochastic, scale_dtype, backend, impl):
+    """``fresh_halo`` with checksummed exchange: a condemned row leaves the
+    *old* cache row in place (one step staler) instead of refreshing it.
+    Detached like the original — staleness gradients ride the grad_in path."""
+    buf = gather_boundary(jax.lax.stop_gradient(h), plan)
+    qt = qlib.quantize(buf, fwd_bits, key, stochastic, scale_dtype, impl=impl)
+    qr, ok = checked_exchange(qt, plan, backend, sf.corrupt_fwd, sf.drop_fwd)
+    fresh = qlib.dequantize(qr, impl=impl)
+    # old_cache is zero outside recv_mask (see faulty_quantized_halo) — one
+    # blend suffices.
+    return jnp.where((ok & plan.recv_mask)[..., None], fresh,
+                     jax.lax.stop_gradient(old_cache))
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9, 10, 11))
+def faulty_stale_halo(h, feat_cache, grad_in, gslot, sf, plan: PlanArrays,
+                      bwd_key, bwd_bits: int, stochastic: bool, scale_dtype,
+                      backend, impl):
+    """``stale_halo`` with a checksummed backward gradient exchange.
+
+    Primal is the cached halo, as in the original. The outgoing gradient
+    communication is checksummed; a condemned row keeps the previous
+    ``grad_in`` row as the next step's in-flight gradient (one epoch staler)
+    rather than dropping to garbage or zero."""
+    del h, grad_in, gslot, sf, plan, bwd_key
+    return feat_cache
+
+
+def _fsh_fwd(h, feat_cache, grad_in, gslot, sf, plan, bwd_key, bwd_bits,
+             stochastic, scale_dtype, backend, impl):
+    return feat_cache, (plan, grad_in, bwd_key, sf)
+
+
+def _fsh_bwd(bwd_bits, stochastic, scale_dtype, backend, impl, res, g):
+    plan, grad_in, bwd_key, sf = res
+    g = jnp.where(plan.recv_mask[..., None], g, 0)
+    qt = qlib.quantize(g, bwd_bits, bwd_key, stochastic, scale_dtype,
+                       impl=impl)
+    qr, ok = checked_exchange(qt, plan, backend, sf.corrupt_bwd, sf.drop_bwd,
+                              reverse=True)
+    fresh_grad = qlib.dequantize(qr, impl=impl)
+    # grad_in is zero outside send_mask (initialized zero, only ever written
+    # by this send-masked blend) — one blend suffices.
+    fresh_grad = jnp.where((ok & plan.send_mask)[..., None], fresh_grad,
+                           grad_in)
+    grad_h = scatter_boundary_grad(grad_in, plan)
+    return (grad_h, None, None, fresh_grad, None, None, None)
+
+
+faulty_stale_halo.defvjp(_fsh_fwd, _fsh_bwd)

@@ -1,0 +1,225 @@
+"""Kill-and-resume chaos harness: preemption-safe training, proven end-to-end.
+
+Three entry points (one module so the subprocess worker ships with its
+orchestrator):
+
+* ``--worker`` — internal: build a :class:`~repro.train.trainer.GNNTrainer`
+  with a per-epoch checkpoint cadence and train to ``--epochs``. With
+  ``--kill-at K`` the worker SIGKILLs *itself* right after training epoch K,
+  **before** saving it — and first drops a fake ``.tmp_step_*`` orphan in the
+  checkpoint dir, so the resume leg also proves the crash-orphan GC
+  (``checkpoint.latest_step``) end-to-end. With ``--resume`` it restores the
+  latest checkpoint first.
+* ``--kill-resume`` — orchestrate the proof: reference run (uninterrupted),
+  chaos run killed at a *seeded* epoch, resumed run to completion; then
+  compare the two final checkpoints leaf-by-leaf. Under ``uniform`` policy +
+  ``sync`` mode the comparison is **bit-exact** (the policy lattice admits
+  no path dependence: epoch keys are ``fold_in(seed, epoch)`` and the whole
+  training state rides the checkpoint); other policy/mode points report the
+  max leaf deviation instead of asserting zero.
+* ``--ci`` — the ``tools/ci.sh --chaos`` gate: bit-exact kill-resume on
+  ``yelp_like@smoke`` + the ``chaos_smoke`` scenario matrix with the fault
+  accounting invariant (``faults_injected == halos_reused + forced_syncs``)
+  asserted on every cell.
+
+SIGKILL, not SIGTERM: the point is that *no* cleanup code runs — exactly a
+preemption — and the atomic checkpoint layout plus orphan GC still recover.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import signal
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+
+import numpy as np
+
+SRC = Path(__file__).resolve().parents[2]
+
+
+def _build_trainer(args):
+    from .. import datasets
+    from ..core.sylvie import SylvieConfig
+    from ..dist.runtime import Runtime
+    from ..models.gnn.models import PAPER_ARCHS as ARCHS
+    from ..train.trainer import GNNTrainer
+    from .scenarios import parse_fault, parse_policy
+
+    pg, _ = datasets.load_partitioned(args.dataset, args.parts,
+                                      seed=args.seed)
+    model = ARCHS[args.arch](pg.x.shape[-1], pg.n_classes)
+    runtime = (Runtime.sharded(args.parts) if args.runtime == "sharded"
+               else Runtime.simulated(args.parts))
+    return GNNTrainer(model, pg, SylvieConfig(mode=args.mode),
+                      policy=parse_policy(args.policy), runtime=runtime,
+                      seed=args.seed, ckpt_dir=args.ckpt, ckpt_every=1,
+                      keep=args.keep, fault_plan=parse_fault(args.fault))
+
+
+def _worker(args) -> int:
+    tr = _build_trainer(args)
+    if args.resume and not tr.resume():
+        print("worker: --resume but no checkpoint found", file=sys.stderr)
+        return 2
+    while tr.epoch < args.epochs:
+        tr.train_epoch()
+        if args.kill_at is not None and tr.epoch == args.kill_at:
+            # simulate a crash mid-save: leave a partial tmp dir behind (the
+            # orphan the resume leg must GC), then die without cleanup.
+            orphan = Path(args.ckpt) / f".tmp_step_{tr.epoch:08d}"
+            orphan.mkdir(parents=True, exist_ok=True)
+            (orphan / "arrays.npz").write_bytes(b"partial garbage")
+            sys.stderr.flush()
+            os.kill(os.getpid(), signal.SIGKILL)
+        tr.save()
+    result = dict(epochs=tr.epoch,
+                  losses=[m.loss for m in tr.history],
+                  test_acc=tr.evaluate("test"),
+                  faults_injected=sum(m.faults_injected for m in tr.history),
+                  halos_reused=sum(m.halos_reused for m in tr.history),
+                  forced_syncs=sum(m.forced_syncs for m in tr.history))
+    if args.out:
+        Path(args.out).write_text(json.dumps(result, indent=1))
+    return 0
+
+
+def _worker_cmd(args, ckpt: str, extra: list[str]) -> list[str]:
+    cmd = [sys.executable, "-m", "repro.launch.chaos", "--worker",
+           "--ckpt", ckpt, "--dataset", args.dataset,
+           "--arch", args.arch, "--parts", str(args.parts),
+           "--epochs", str(args.epochs), "--mode", args.mode,
+           "--policy", args.policy, "--seed", str(args.seed),
+           "--runtime", args.runtime, "--keep", str(args.keep)]
+    if args.fault:
+        cmd += ["--fault", args.fault]
+    return cmd + extra
+
+
+def _run_worker(cmd: list[str]) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = f"{SRC}{os.pathsep}" + env.get("PYTHONPATH", "")
+    return subprocess.run(cmd, env=env, capture_output=True, text=True)
+
+
+def _final_arrays(ckpt_dir: str) -> dict[str, np.ndarray]:
+    from ..train.checkpoint import latest_step
+    step = latest_step(ckpt_dir)
+    assert step is not None, f"no checkpoint under {ckpt_dir}"
+    with np.load(Path(ckpt_dir) / f"step_{step:08d}" / "arrays.npz") as z:
+        return {k: z[k] for k in z.files}
+
+
+def kill_resume(args) -> dict:
+    """Run the reference / killed / resumed legs; return the comparison."""
+    root = Path(args.out_dir) if args.out_dir else \
+        Path(tempfile.mkdtemp(prefix="chaos_"))
+    root.mkdir(parents=True, exist_ok=True)
+    ref_dir, chaos_dir = str(root / "ref"), str(root / "chaos")
+    kill_at = int(np.random.default_rng(args.seed).integers(
+        2, max(3, args.epochs)))
+
+    ref = _run_worker(_worker_cmd(args, ref_dir,
+                                  ["--out", str(root / "ref.json")]))
+    assert ref.returncode == 0, f"reference run failed:\n{ref.stderr}"
+
+    killed = _run_worker(_worker_cmd(args, chaos_dir,
+                                     ["--kill-at", str(kill_at)]))
+    assert killed.returncode == -signal.SIGKILL, \
+        f"expected SIGKILL death, got rc={killed.returncode}:\n{killed.stderr}"
+    orphans = list(Path(chaos_dir).glob(".tmp_step_*"))
+    assert orphans, "killed worker left no .tmp_step_* orphan"
+
+    resumed = _run_worker(_worker_cmd(
+        args, chaos_dir, ["--resume", "--out", str(root / "resumed.json")]))
+    assert resumed.returncode == 0, f"resumed run failed:\n{resumed.stderr}"
+    assert not list(Path(chaos_dir).glob(".tmp_step_*")), \
+        "resume did not GC the crash orphan"
+
+    a, b = _final_arrays(ref_dir), _final_arrays(chaos_dir)
+    assert sorted(a) == sorted(b), "final checkpoints differ in structure"
+    max_dev, exact = 0.0, True
+    for k in a:
+        if not np.array_equal(a[k], b[k]):
+            exact = False
+            if np.issubdtype(a[k].dtype, np.floating):
+                max_dev = max(max_dev,
+                              float(np.abs(a[k].astype(np.float64)
+                                           - b[k].astype(np.float64)).max()))
+            else:
+                max_dev = float("inf")
+    result = dict(kill_at=kill_at, bit_exact=exact, max_deviation=max_dev,
+                  ref=json.loads((root / "ref.json").read_text()),
+                  resumed=json.loads((root / "resumed.json").read_text()))
+    print(json.dumps({k: result[k] for k in
+                      ("kill_at", "bit_exact", "max_deviation")}, indent=1))
+    return result
+
+
+def _ci(args) -> int:
+    from .scenarios import run_scenario
+
+    # 1) bit-exact kill-and-resume where the policy lattice guarantees it.
+    kr = argparse.Namespace(
+        dataset="yelp_like@smoke", arch="gcn", parts=4, epochs=5,
+        mode="sync", policy="uniform:1", seed=0, runtime="simulated",
+        fault=None, keep=3, out_dir=args.out_dir)
+    result = kill_resume(kr)
+    assert result["bit_exact"], \
+        f"uniform/sync kill-resume not bit-exact: {result['max_deviation']}"
+
+    # 2) the chaos scenario matrix: completes under the seeded schedule and
+    #    every injected fault is accounted for.
+    for rep in run_scenario("chaos_smoke"):
+        assert rep["faults_injected"] == \
+            rep["halos_reused"] + rep["forced_syncs"], \
+            f"{rep['cell']}: accounting broken ({rep['faults_injected']} != " \
+            f"{rep['halos_reused']} + {rep['forced_syncs']})"
+        assert rep["faults_injected"] > 0, f"{rep['cell']}: schedule inert"
+    print("chaos ci: kill-resume bit-exact + scenario accounting OK")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.launch.chaos",
+        description="seeded kill-and-resume harness + chaos CI gate")
+    ap.add_argument("--worker", action="store_true", help="internal")
+    ap.add_argument("--kill-resume", action="store_true",
+                    help="run the reference/killed/resumed proof")
+    ap.add_argument("--ci", action="store_true",
+                    help="the tools/ci.sh --chaos gate")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--dataset", default="yelp_like@smoke")
+    ap.add_argument("--arch", default="gcn")
+    ap.add_argument("--parts", type=int, default=4)
+    ap.add_argument("--epochs", type=int, default=5)
+    ap.add_argument("--mode", default="sync")
+    ap.add_argument("--policy", default="uniform:1")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--runtime", default="simulated",
+                    choices=("simulated", "sharded"))
+    ap.add_argument("--fault", default=None,
+                    help="scenarios.parse_fault spec, e.g. drop=0.15,seed=7")
+    ap.add_argument("--keep", type=int, default=3)
+    ap.add_argument("--kill-at", type=int, default=None)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--out-dir", default=None)
+    args = ap.parse_args(argv)
+    if args.worker:
+        assert args.ckpt, "--worker requires --ckpt"
+        return _worker(args)
+    if args.ci:
+        return _ci(args)
+    if args.kill_resume:
+        kill_resume(args)
+        return 0
+    ap.error("pick one of --worker / --kill-resume / --ci")
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

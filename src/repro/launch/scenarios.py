@@ -30,6 +30,7 @@ from .. import datasets
 from .. import policy as P
 from ..core.sylvie import SylvieConfig
 from ..dist.runtime import Runtime
+from ..faults import FaultPlan
 from ..models.gnn.models import PAPER_ARCHS as ARCHS
 from ..train.trainer import GNNTrainer
 from .mesh import ICI_BW
@@ -51,6 +52,30 @@ def parse_policy(spec: str):
         return P.AdaQPVariance(budget_bits=a[0] if a else 4)
     raise KeyError(f"unknown policy spec {spec!r}; known kinds: uniform, "
                    "warmup, bounded_staleness, adaqp")
+
+
+def parse_fault(spec: Optional[str]) -> Optional[FaultPlan]:
+    """Compact fault spec -> :class:`~repro.faults.FaultPlan` (None -> None).
+
+    Comma-separated ``key=value`` pairs, e.g.
+    ``"drop=0.15,corrupt=0.05,seed=7,escalate=3"``. Keys: ``drop``,
+    ``corrupt``, ``delay``, ``preempt`` (rates), ``delay_s`` (seconds),
+    ``seed``, ``escalate`` (epochs)."""
+    if spec is None or spec == "":
+        return None
+    keys = {"drop": ("drop_rate", float), "corrupt": ("corrupt_rate", float),
+            "delay": ("delay_rate", float), "preempt": ("preempt_rate", float),
+            "delay_s": ("delay_s", float), "seed": ("seed", int),
+            "escalate": ("escalate_after", int)}
+    kw = {}
+    for part in spec.split(","):
+        k, _, v = part.partition("=")
+        if k not in keys:
+            raise KeyError(f"unknown fault key {k!r} in {spec!r}; "
+                           f"known: {sorted(keys)}")
+        name, cast = keys[k]
+        kw[name] = cast(v)
+    return FaultPlan(**kw)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,6 +108,10 @@ class Scenario:
     parts: int = 4
     epochs: int = 3
     seed: int = 0
+    # seeded chaos schedule applied to every cell (parse_fault spec string;
+    # None = fault-free). A string, not a FaultPlan, so Scenario stays a
+    # flat declarative record.
+    fault: Optional[str] = None
 
     def cells(self) -> tuple[Cell, ...]:
         """The expanded cross product, in deterministic order."""
@@ -118,6 +147,18 @@ SCENARIOS: dict[str, Scenario] = {
         policies=("uniform:32", "uniform:1", "adaqp:4"),
         modes=("sync", "async"),
         parts=8, epochs=40),
+    # CI chaos gate: the smoke workload under a seeded fault schedule that
+    # drops/corrupts well over 10% of halo exchanges. tools/ci.sh --chaos
+    # runs it (via repro.launch.chaos --ci) and asserts the fault accounting
+    # on every cell report.
+    "chaos_smoke": Scenario(
+        name="chaos_smoke",
+        archs=("gcn",),
+        datasets=("yelp_like@smoke",),
+        policies=("uniform:1", "bounded_staleness:4:1"),
+        modes=("sync", "async"),
+        parts=4, epochs=6,
+        fault="drop=0.15,corrupt=0.05,seed=7"),
 }
 
 
@@ -155,7 +196,7 @@ def run_cell(scn: Scenario, cell: Cell, *,
     policy = parse_policy(cell.policy)
     cfg = SylvieConfig(mode=cell.mode)
     tr = GNNTrainer(model, pg, cfg, policy=policy, runtime=runtime,
-                    seed=scn.seed)
+                    seed=scn.seed, fault_plan=parse_fault(scn.fault))
     t0 = time.time()
     tr.fit(scn.epochs)
     seconds = time.time() - t0
@@ -180,6 +221,14 @@ def run_cell(scn: Scenario, cell: Cell, *,
         "modeled_tpu_comm_s": float((pb + eb) / scn.parts / ICI_BW),
         "bits_per_site": [list(b) for b in tr.history[-1].bits_per_site],
         "seconds": seconds,
+        # chaos accounting (zeros when scn.fault is None); the invariant
+        # faults_injected == halos_reused + forced_syncs is asserted by the
+        # --chaos gate (repro.launch.chaos --ci), not silently trusted here.
+        "fault": scn.fault,
+        "faults_injected": int(sum(m.faults_injected for m in tr.history)),
+        "halos_reused": int(sum(m.halos_reused for m in tr.history)),
+        "forced_syncs": int(sum(m.forced_syncs for m in tr.history)),
+        "stall_s": float(sum(m.stall_s for m in tr.history)),
     }
 
 

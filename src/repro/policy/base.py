@@ -210,6 +210,12 @@ class Telemetry:
     val_history: tuple[float, ...] = ()
     needs_sync: bool = False
     prev: Optional[EpochDecision] = None
+    # Consecutive-faulty-epoch count per site under a chaos run (see
+    # ``repro.faults``): a dropped/corrupted exchange degrades to the cached
+    # halo, making that site's effective staleness grow — ``BoundedStaleness``
+    # treats a counter at/over its ``eps_s`` exactly like a due refresh.
+    # Empty when no fault plan is armed.
+    site_staleness: tuple[int, ...] = ()
 
 
 @runtime_checkable

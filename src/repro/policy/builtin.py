@@ -128,10 +128,16 @@ class BoundedStaleness:
         return f"bounded_staleness({self.eps_s})"
 
     def decide(self, tel: Telemetry) -> EpochDecision:
+        # Fault-induced staleness counts against the same eps_s bound as the
+        # scheduled staleness: a site that has been degrading to its cached
+        # halo for eps_s consecutive epochs is due for a refresh now.
+        stale = (bool(tel.site_staleness) and self.eps_s is not None
+                 and max(tel.site_staleness) >= self.eps_s)
         return EpochDecision(
             sites=_uniform_sites(tel, self.bits, self.stochastic,
                                  self.boundary_sample_p),
-            sync=use_sync_step(tel.epoch, self.eps_s) or tel.needs_sync,
+            sync=use_sync_step(tel.epoch, self.eps_s) or tel.needs_sync
+            or stale,
             ef_bits=self.ef_bits)
 
 

@@ -28,10 +28,11 @@ from . import delta, loadgen  # noqa: F401
 from .delta import RefreshPlan, RefreshReport  # noqa: F401
 from .engine import InferenceEngine, QueryResult, ServeComm, ServeConfig  # noqa: F401
 from .loadgen import closed_loop  # noqa: F401
-from .server import EmbeddingServer, Request, Response  # noqa: F401
+from .server import (EmbeddingServer, Rejection, Request,  # noqa: F401
+                     Response)
 
 __all__ = [
     "InferenceEngine", "ServeConfig", "ServeComm", "QueryResult",
-    "RefreshPlan", "RefreshReport", "EmbeddingServer", "Request", "Response",
-    "closed_loop", "delta", "loadgen",
+    "RefreshPlan", "RefreshReport", "EmbeddingServer", "Rejection",
+    "Request", "Response", "closed_loop", "delta", "loadgen",
 ]

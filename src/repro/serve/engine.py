@@ -119,10 +119,17 @@ class ServeComm(SylvieComm):
 
 @dataclasses.dataclass
 class QueryResult:
-    """One answered query batch."""
+    """One answered query batch.
+
+    ``staleness[j]`` counts the sweeps served from cache for node ``j``'s
+    partition since its rows were last recomputed — 0 everywhere while the
+    engine is healthy, >0 for nodes on a partition marked down (degraded
+    mode: answers come from the stale embedding cache, stamped, never
+    refused)."""
 
     node_ids: np.ndarray
     logits: np.ndarray
+    staleness: Optional[np.ndarray] = None
 
     @property
     def predictions(self) -> np.ndarray:
@@ -194,6 +201,12 @@ class InferenceEngine:
         self._logits_host: Optional[np.ndarray] = None
         self._since_full = 0
         self._refresh_count = 0
+        # degraded mode: partitions marked down contribute no fresh halo
+        # rows (their send-affected masks are zeroed — data, same sweep
+        # executable) and their cached logits are frozen; per-partition
+        # staleness counts sweeps served from the frozen cache.
+        self._down = np.zeros(p, dtype=bool)
+        self._part_staleness = np.zeros(p, dtype=np.int64)
 
     # ------------------------------------------------------------------
     # the sweep executable (shared by full sweeps and delta refreshes)
@@ -217,12 +230,27 @@ class InferenceEngine:
         t0 = time.time()
         key = jax.random.fold_in(self.key, self._refresh_count)
         self._refresh_count += 1
+        masks = refresh.device_masks()
+        if self._down.any():
+            # down partitions publish nothing fresh: zero their send-affected
+            # rows so every receiver keeps its cached rows from them. Masks
+            # are data — the sweep executable is unchanged.
+            up = (~self._down)[:, None].astype(np.float32)
+            masks = tuple(m * up for m in masks)
         logits, layers, halos = self._sweep(self.params, self.block, self.x,
-                                            self._halos,
-                                            refresh.device_masks(), key)
+                                            self._halos, masks, key)
         self._layers = layers
         self._halos = halos
-        self._logits_host = np.asarray(jax.device_get(logits))
+        fresh_logits = np.asarray(jax.device_get(logits))
+        if self._logits_host is not None and self._down.any():
+            # a down partition computes nothing: its served rows stay frozen
+            # at the last sweep before it went down. (device_get may hand
+            # back a read-only view — copy before patching.)
+            fresh_logits = fresh_logits.copy()
+            fresh_logits[self._down] = self._logits_host[self._down]
+        self._logits_host = fresh_logits
+        self._part_staleness = np.where(self._down,
+                                        self._part_staleness + 1, 0)
         pb, eb, mb = deltalib.refresh_wire_bytes(
             self.block.plan.real_rows, self.site_dims, self.decision, refresh,
             self.config.scale_dtype)
@@ -292,6 +320,27 @@ class InferenceEngine:
         self._since_full += 1
         return rep
 
+    # ------------------------------------------------------------------
+    # degraded mode (partition down/up)
+    # ------------------------------------------------------------------
+    def set_down(self, parts) -> None:
+        """Mark partitions down. Their cached rows keep serving (stamped with
+        growing staleness); sweeps stop consuming their halo contributions."""
+        self._down[np.asarray(parts, dtype=np.int64).reshape(-1)] = True
+
+    def set_up(self, parts) -> None:
+        """Bring partitions back. Staleness resets on their next sweep (the
+        caller should run ``full_sweep``/``refresh`` to recompute their rows)."""
+        self._down[np.asarray(parts, dtype=np.int64).reshape(-1)] = False
+
+    def down_partitions(self) -> np.ndarray:
+        return np.nonzero(self._down)[0]
+
+    @property
+    def part_staleness(self) -> np.ndarray:
+        """(P,) sweeps served from frozen cache per partition (0 = fresh)."""
+        return self._part_staleness.copy()
+
     def _require_swept(self):
         if self._logits_host is None:
             raise RuntimeError("no caches yet — call full_sweep() first")
@@ -312,7 +361,9 @@ class InferenceEngine:
         self._require_swept()
         ids = self._check_ids(node_ids)
         out = self._logits_host[self._part_of[ids], self._slot_of[ids]]
-        return QueryResult(node_ids=ids, logits=out)
+        return QueryResult(node_ids=ids, logits=out,
+                           staleness=self._part_staleness[
+                               self._part_of[ids]].copy())
 
     def embeddings(self, node_ids, site: int = -1) -> np.ndarray:
         """Cached embeddings entering exchange site ``site`` for a batch of

@@ -20,7 +20,14 @@ from typing import Optional
 
 import numpy as np
 
-from .server import EmbeddingServer
+from .server import EmbeddingServer, Rejection
+
+# retry/backoff shape on admission rejection: exponential with full jitter,
+# seeded (the backoff draws come from the workload RNG, so runs stay
+# reproducible). The base/cap are tiny because the in-process server frees
+# capacity per step() call, not per network round-trip.
+BACKOFF_BASE_S = 1e-4
+BACKOFF_CAP_S = 0.05
 
 
 def percentiles_ms(latencies_s) -> dict:
@@ -47,37 +54,67 @@ def closed_loop(server: EmbeddingServer, n_nodes: int, *, clients: int = 8,
     rng = np.random.default_rng(seed)
     latencies: list[float] = []
     refresh_bytes = 0
-    refreshes = 0
+    refreshes = refresh_failures = 0
     issued = completed = 0
     outstanding = 0
+    attempts = 0            # consecutive rejected submits (backoff exponent)
+    backoff_s = 0.0
+    reject_reasons: dict[str, int] = {}
     d_feat = server.engine.pg.x.shape[-1]
     next_refresh = refresh_every if refresh_every else None
     t0 = time.perf_counter()
     while completed < requests:
         while outstanding < clients and issued < requests:
             ids = rng.integers(0, n_nodes, size=batch)
-            if server.submit(ids) is None:
-                break                       # admission queue full; back off
+            r = server.submit(ids)
+            if isinstance(r, Rejection):
+                reject_reasons[r.reason] = reject_reasons.get(r.reason, 0) + 1
+                if r.reason == "draining":
+                    break   # not transient — nothing a retry can fix
+                # exponential backoff with full jitter, floored by the
+                # server's own capacity estimate
+                delay = min(BACKOFF_CAP_S, BACKOFF_BASE_S * (2 ** attempts))
+                delay = max(delay * rng.random(),
+                            min(r.retry_after_hint, BACKOFF_CAP_S))
+                attempts += 1
+                backoff_s += delay
+                time.sleep(delay)
+                break       # let step() drain before re-offering load
+            attempts = 0
             issued += 1
             outstanding += 1
-        for resp in server.step():
+        served = server.step()
+        for resp in served:
             latencies.append(resp.latency_s)
             completed += 1
             outstanding -= 1
+        # deadline expiry (none by default) silently retires in-flight work;
+        # the queue *is* the outstanding set in this closed loop
+        outstanding = server.depth
+        if not served and not server.depth and \
+                (issued >= requests or server.health == "draining"):
+            break           # drained, or the server stopped admitting
         if next_refresh is not None and completed >= next_refresh:
             ids = rng.choice(n_nodes, size=max(1, refresh_nodes),
                              replace=False)
             rows = rng.normal(0, 1, size=(ids.size, d_feat)).astype(np.float32)
-            rep = server.engine.refresh(ids, rows)
-            refresh_bytes += rep.wire_bytes
-            refreshes += 1
+            rep = server.refresh(ids, rows)
+            if rep is None:
+                refresh_failures += 1
+            else:
+                refresh_bytes += rep.wire_bytes
+                refreshes += 1
             next_refresh += refresh_every
     seconds = time.perf_counter() - t0
     report = dict(requests=int(completed), clients=int(clients),
                   batch=int(batch), seed=int(seed), seconds=float(seconds),
                   qps=float(completed / max(seconds, 1e-9)),
                   rejected=int(server.rejected),
+                  rejection_reasons=dict(reject_reasons),
+                  backoff_s=float(backoff_s),
+                  expired=int(server.expired),
                   refreshes=int(refreshes),
+                  refresh_failures=int(refresh_failures),
                   refresh_wire_bytes=int(refresh_bytes),
                   **percentiles_ms(latencies))
     return report

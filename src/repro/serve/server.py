@@ -1,29 +1,57 @@
 """In-process request path: admission queue + microbatched cache lookups.
 
 ``EmbeddingServer`` fronts an :class:`~repro.serve.engine.InferenceEngine`
-with the two mechanisms a real serving tier needs even when the per-query work
+with the mechanisms a real serving tier needs even when the per-query work
 is a cache lookup:
 
-* **admission queue** — ``submit`` enqueues a request or *rejects* it
-  (returns ``None``) when ``max_queue`` requests are already waiting;
+* **admission queue** — ``submit`` enqueues a request or *rejects* it with a
+  typed :class:`Rejection` (reason, queue depth, retry hint) when
+  ``max_queue`` requests are already waiting or the server is draining;
   back-pressure instead of unbounded latency;
 * **microbatching** — ``step`` drains whole requests until the next one would
   overflow ``microbatch`` node ids, answers them with a single engine lookup,
-  and stamps each response with its queue-to-completion latency.
+  and stamps each response with its queue-to-completion latency;
+* **deadlines** — a request submitted with ``deadline_s`` is *expired* (never
+  served) once the clock passes it; late answers are worthless answers;
+* **health state machine** — ``healthy → degraded → draining``. Degraded
+  (a failed delta refresh, or a partition marked down) keeps answering every
+  in-deadline request from the stale embedding cache, with per-node staleness
+  stamps on the responses; draining stops admitting but serves out the queue.
 
 The server is deliberately synchronous and single-threaded: the load
 generator (``loadgen.py``) drives ``submit``/``step`` as a closed loop, and
-determinism (seeded ids, no thread scheduling) keeps the latency distribution
-reproducible enough to regression-track in ``BENCH_serve.json``.
+determinism (seeded ids, no thread scheduling, injectable ``clock``) keeps
+the latency distribution reproducible enough to regression-track in
+``BENCH_serve.json``.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from collections import deque
-from typing import Callable, Optional
+from typing import Callable, Optional, Union
 
 import numpy as np
+
+# health states
+HEALTHY = "healthy"
+DEGRADED = "degraded"
+DRAINING = "draining"
+
+
+@dataclasses.dataclass(frozen=True)
+class Rejection:
+    """A typed admission rejection (the back-off contract).
+
+    ``reason`` is ``"queue_full"`` or ``"draining"``; ``depth`` the queue
+    occupancy at rejection; ``retry_after_hint`` a server-side estimate (s)
+    of when capacity frees up (an EMA of recent ``step`` times — 0.0 before
+    any batch has been served). Deliberately *no* ``__bool__``: request id 0
+    is falsy too, so clients must discriminate with ``isinstance``."""
+
+    reason: str
+    depth: int
+    retry_after_hint: float
 
 
 @dataclasses.dataclass
@@ -31,6 +59,8 @@ class Request:
     req_id: int
     node_ids: np.ndarray
     t_submit: float
+    # absolute clock time after which the answer is worthless (None = never)
+    deadline: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -39,6 +69,10 @@ class Response:
     node_ids: np.ndarray
     logits: np.ndarray
     latency_s: float
+    # per-node staleness stamps (sweeps since the node's partition was last
+    # recomputed; see engine.QueryResult.staleness) — None from engines that
+    # predate the stamp.
+    staleness: Optional[np.ndarray] = None
 
     @property
     def predictions(self) -> np.ndarray:
@@ -56,6 +90,10 @@ class EmbeddingServer:
         assert resp.req_id == rid and resp.logits.shape == (3, n_classes)
     """
 
+    # EMA factor for the per-step service-time estimate behind
+    # Rejection.retry_after_hint.
+    STEP_EMA = 0.7
+
     def __init__(self, engine, microbatch: int = 128, max_queue: int = 1024,
                  clock: Optional[Callable[[], float]] = None):
         if microbatch < 1 or max_queue < 1:
@@ -69,35 +107,64 @@ class EmbeddingServer:
         self.accepted = 0
         self.rejected = 0
         self.served = 0
+        self.expired = 0
+        self.refresh_failures = 0
+        self.health = HEALTHY
+        self._ema_step_s = 0.0
 
     @property
     def depth(self) -> int:
         """Requests currently waiting."""
         return len(self._queue)
 
-    def submit(self, node_ids) -> Optional[int]:
-        """Enqueue a query batch. Returns the request id, or ``None`` when
-        the admission queue is full (the caller should back off and retry).
-        A single request larger than the microbatch can never be scheduled
-        and is a caller error."""
+    def _reject(self, reason: str) -> Rejection:
+        self.rejected += 1
+        return Rejection(reason=reason, depth=len(self._queue),
+                         retry_after_hint=self._ema_step_s)
+
+    def submit(self, node_ids,
+               deadline_s: Optional[float] = None) -> Union[int, Rejection]:
+        """Enqueue a query batch. Returns the request id, or a typed
+        :class:`Rejection` when the admission queue is full or the server is
+        draining (the caller should back off and retry — discriminate with
+        ``isinstance(r, Rejection)``, request id 0 is falsy too). A single
+        request larger than the microbatch can never be scheduled and is a
+        caller error. ``deadline_s`` is a *relative* latency budget: the
+        request expires (is never served) once the clock passes
+        ``now + deadline_s``."""
         ids = np.asarray(node_ids, dtype=np.int64).reshape(-1)
         if ids.size == 0 or ids.size > self.microbatch:
             raise ValueError(
                 f"request size must be in [1, microbatch={self.microbatch}], "
                 f"got {ids.size}")
+        if self.health == DRAINING:
+            return self._reject("draining")
         if len(self._queue) >= self.max_queue:
-            self.rejected += 1
-            return None
+            return self._reject("queue_full")
         rid = self._next_id
         self._next_id += 1
-        self._queue.append(Request(rid, ids, self.clock()))
+        now = self.clock()
+        deadline = None if deadline_s is None else now + float(deadline_s)
+        self._queue.append(Request(rid, ids, now, deadline))
         self.accepted += 1
         return rid
 
+    def _expire(self, now: float) -> None:
+        """Drop every queued request whose deadline has already passed —
+        serving it would spend a microbatch slot on a worthless answer."""
+        if not any(r.deadline is not None for r in self._queue):
+            return
+        live = deque(r for r in self._queue
+                     if r.deadline is None or r.deadline >= now)
+        self.expired += len(self._queue) - len(live)
+        self._queue = live
+
     def step(self) -> list[Response]:
-        """Serve one microbatch: drain whole requests up to ``microbatch``
-        ids, answer them with a single cache lookup, return the responses
-        (possibly empty when the queue is)."""
+        """Serve one microbatch: expire past-deadline requests, drain whole
+        requests up to ``microbatch`` ids, answer them with a single cache
+        lookup, return the responses (possibly empty when the queue is)."""
+        t_start = self.clock()
+        self._expire(t_start)
         batch: list[Request] = []
         total = 0
         while self._queue and total + self._queue[0].node_ids.size \
@@ -108,13 +175,19 @@ class EmbeddingServer:
         if not batch:
             return []
         flat = np.concatenate([r.node_ids for r in batch])
-        logits = self.engine.query(flat).logits
+        res = self.engine.query(flat)
+        logits = res.logits
+        stamps = getattr(res, "staleness", None)
         now = self.clock()
+        self._ema_step_s = (now - t_start if self._ema_step_s == 0.0 else
+                            self.STEP_EMA * self._ema_step_s
+                            + (1.0 - self.STEP_EMA) * (now - t_start))
         out, start = [], 0
         for r in batch:
             stop = start + r.node_ids.size
-            out.append(Response(r.req_id, r.node_ids, logits[start:stop],
-                                now - r.t_submit))
+            out.append(Response(
+                r.req_id, r.node_ids, logits[start:stop], now - r.t_submit,
+                staleness=None if stamps is None else stamps[start:stop]))
             start = stop
         self.served += len(out)
         return out
@@ -123,5 +196,47 @@ class EmbeddingServer:
         """Serve until the queue is empty."""
         out = []
         while self._queue:
-            out.extend(self.step())
+            got = self.step()
+            if not got and self._queue:
+                break       # everything left just expired
+            out.extend(got)
         return out
+
+    # ------------------------------------------------------------------
+    # health state machine: healthy -> degraded -> draining
+    # ------------------------------------------------------------------
+    def _recompute_health(self) -> None:
+        if self.health == DRAINING:
+            return          # draining is terminal until start_draining ends
+        down = getattr(self.engine, "down_partitions", lambda: ())()
+        self.health = DEGRADED if len(down) else HEALTHY
+
+    def refresh(self, changed_ids, rows, **kw):
+        """Delta-refresh through the health machine: forwards to
+        ``engine.refresh``; on failure counts it, degrades (stale caches keep
+        serving, stamped), and returns ``None`` instead of raising — the
+        request path must survive a bad update."""
+        try:
+            rep = self.engine.refresh(changed_ids, rows, **kw)
+        except Exception:
+            self.refresh_failures += 1
+            if self.health != DRAINING:
+                self.health = DEGRADED
+            return None
+        self._recompute_health()
+        return rep
+
+    def mark_partition_down(self, part: int) -> None:
+        """A partition stopped answering: its cached rows keep serving with
+        staleness stamps; the server is degraded until it returns."""
+        self.engine.set_down([part])
+        self._recompute_health()
+
+    def mark_partition_up(self, part: int) -> None:
+        self.engine.set_up([part])
+        self._recompute_health()
+
+    def start_draining(self) -> None:
+        """Stop admitting (submit returns Rejection("draining", ...)); the
+        queue still serves out via ``step``/``drain``."""
+        self.health = DRAINING

@@ -94,8 +94,18 @@ def latest_step(ckpt_dir: str | os.PathLike) -> Optional[int]:
     ckpt_dir = Path(ckpt_dir)
     if not ckpt_dir.exists():
         return None
-    steps = [int(p.name.split("_")[1]) for p in ckpt_dir.iterdir()
-             if p.is_dir() and p.name.startswith("step_")]
+    steps = []
+    for p in ckpt_dir.iterdir():
+        if not p.is_dir():
+            continue
+        if p.name.startswith(".tmp_step_"):
+            # orphan from a crash mid-save: never published (the atomic
+            # rename didn't happen), so its contents are untrusted — collect
+            # it now instead of waiting for the same step to be saved again.
+            shutil.rmtree(p, ignore_errors=True)
+            continue
+        if p.name.startswith("step_"):
+            steps.append(int(p.name.split("_")[1]))
     return max(steps) if steps else None
 
 

@@ -64,6 +64,10 @@ class GNNTrainState:
     # last step — (n_sites, 2): [sum of squared row ranges, live rows].
     ef: EFState
     site_stats: jax.Array
+    # Per-epoch fault control block (repro.faults.plan.FaultCtl) — boolean
+    # wire masks riding as *data*, set by the trainer each chaos epoch.
+    # None = fault-free pytree structure, tracing the exact legacy program.
+    faults: Optional[object] = None
 
     @staticmethod
     def create(model, opt, key, plan, stacked_parts=None):
@@ -126,14 +130,18 @@ def make_gnn_steps(model, cfg: SylvieConfig, opt: optlib.Optimizer,
         updates, new_opt = opt.update(params_grads, state.opt_state, state.params)
         new_params = optlib.apply_updates(state.params, updates)
         return GNNTrainState(new_params, new_opt, new_halo, state.step + 1,
-                             new_ef, stats), loss
+                             new_ef, stats, state.faults), loss
 
     def train_step_sync(state: GNNTrainState, block, x, y, mask, key):
         TRACE_LOG.append("sync")
 
         def loss_fn(params):
+            armed = state.faults is not None
             comm = SylvieComm(sync_cfg, block.plan, key, backend=backend,
-                              decision=decision, collect_stats=True)
+                              decision=decision, collect_stats=True,
+                              feat_caches=(state.halo.feats if armed else None),
+                              fault_sites=(state.faults.sites if armed
+                                           else None))
             logits = model.apply(params, block, x, comm)
             loss = _masked_loss(logits, y, mask, backend)
             caches = tuple(jax.lax.stop_gradient(c) for c in comm.new_feat_caches)
@@ -152,7 +160,10 @@ def make_gnn_steps(model, cfg: SylvieConfig, opt: optlib.Optimizer,
             comm = SylvieComm(async_cfg, block.plan, key, backend=backend,
                               decision=decision, collect_stats=True,
                               feat_caches=state.halo.feats,
-                              grad_ins=state.halo.grads, gslots=gslots)
+                              grad_ins=state.halo.grads, gslots=gslots,
+                              fault_sites=(state.faults.sites
+                                           if state.faults is not None
+                                           else None))
             logits = model.apply(params, block, x, comm)
             loss = _masked_loss(logits, y, mask, backend)
             caches = tuple(jax.lax.stop_gradient(c) for c in comm.new_feat_caches)

@@ -40,6 +40,8 @@ import numpy as np
 from ..core.exchange import exchange_bytes, wire_bytes
 from ..core.sylvie import SylvieConfig
 from ..dist.runtime import Runtime
+from ..faults.backend import FaultyBackend
+from ..faults.plan import FaultCtl, FaultPlan, RowGeometry
 from ..models.gnn import blocks as B
 from ..policy.base import (CommPolicy, EpochDecision, SiteStats, Telemetry,
                            validate_decision)
@@ -69,6 +71,15 @@ class EpochMetrics:
     bits_per_site: tuple = ()
     policy: str = ""
     ef_bits: Optional[int] = None
+    # chaos accounting (unit = one scheduled drop/corrupt message). Invariant:
+    # faults_injected == halos_reused + forced_syncs, exactly — a normal
+    # faulty epoch recovers every unit from the stale cache, a recovery epoch
+    # suppresses its whole schedule and retries synchronously. ``stall_s`` is
+    # the modeled straggler critical-path extension (not wall clock).
+    faults_injected: int = 0
+    halos_reused: int = 0
+    forced_syncs: int = 0
+    stall_s: float = 0.0
 
 
 class GNNTrainer:
@@ -93,7 +104,9 @@ class GNNTrainer:
                  policy: Optional[CommPolicy] = None,
                  eps_s: Optional[int] = None,
                  runtime: Optional[Runtime] = None, mesh=None, seed: int = 0,
-                 ckpt_dir: Optional[str] = None, keep: int = 3):
+                 ckpt_dir: Optional[str] = None, keep: int = 3,
+                 fault_plan: Optional[FaultPlan] = None,
+                 ckpt_every: Optional[int] = None):
         self.model = model
         self.pg = pg
         self.cfg = cfg = cfg if cfg is not None else SylvieConfig()
@@ -121,6 +134,17 @@ class GNNTrainer:
             raise ValueError(
                 f"runtime is committed to {runtime.n_parts} partitions but the "
                 f"graph was partitioned into {p}")
+        # a chaos run is any of: fault_plan=..., or a runtime whose backend is
+        # already a FaultyBackend (the plan is then discovered from it).
+        if isinstance(runtime.backend, FaultyBackend):
+            if fault_plan is not None and fault_plan != runtime.backend.plan:
+                raise ValueError("runtime backend already carries a FaultPlan "
+                                 "that differs from fault_plan")
+            fault_plan = runtime.backend.plan
+        elif fault_plan is not None:
+            runtime = Runtime(FaultyBackend(runtime.backend, fault_plan))
+        self.fault_plan = fault_plan
+        self.ckpt_every = ckpt_every
         self.runtime = runtime
         self.mesh = runtime.mesh
         self.opt = opt or optlib.adam(1e-2)
@@ -155,6 +179,13 @@ class GNNTrainer:
         self._needs_sync = False
         self._site_stats: Optional[tuple[SiteStats, ...]] = None
         self._last_decision: Optional[EpochDecision] = None
+        # chaos state: per-site consecutive-faulty-epoch counters (the
+        # escalation rule watches their max) and the force-recovery latch set
+        # when a site crosses ``fault_plan.escalate_after``.
+        self._fault_geom = (RowGeometry.from_plan(self.block.plan)
+                            if self.fault_plan is not None else None)
+        self._site_staleness = np.zeros(self.n_sites, np.int64)
+        self._force_recovery = False
 
     # ------------------------------------------------------------------
     # the policy loop
@@ -166,7 +197,9 @@ class GNNTrainer:
             site_stats=self._site_stats,
             val_history=tuple(m.val_acc for m in self.history
                               if m.val_acc is not None),
-            needs_sync=self._needs_sync, prev=self._last_decision)
+            needs_sync=self._needs_sync, prev=self._last_decision,
+            site_staleness=(tuple(int(x) for x in self._site_staleness)
+                            if self.fault_plan is not None else ()))
 
     def _decide(self) -> EpochDecision:
         """Pure: telemetry -> snapped EpochDecision (callable speculatively,
@@ -251,8 +284,51 @@ class GNNTrainer:
     def _epoch_key(self):
         return jax.random.fold_in(self.key, self.epoch)
 
+    # ------------------------------------------------------------------
+    # chaos: arm the epoch's seeded fault schedule
+    # ------------------------------------------------------------------
+    def _arm_faults(self, decision: EpochDecision):
+        """Draw this epoch's seeded fault set, expand it to wire masks in
+        ``state.faults`` (data — armed epochs share one executable), and do
+        the staleness-as-recovery bookkeeping.
+
+        Returns ``(decision, injected, reused, forced, stall_s, escalate)``.
+        A recovery epoch (the latch set by a previous escalation) suppresses
+        the whole schedule — all-false masks, same pytree structure — and
+        retries as a full-precision synchronous exchange; its scheduled units
+        are accounted as ``forced_syncs``. Otherwise every scheduled unit is
+        recovered from the stale cache (``halos_reused``), keeping
+        ``faults_injected == halos_reused + forced_syncs`` exact."""
+        plan = self.fault_plan
+        ev = plan.events(self.epoch, self.n_sites, self.pg.plan.n_parts)
+        injected = ev.n_injected
+        escalate = False
+        if self._force_recovery:
+            decision = dataclasses.replace(decision.with_bits(32), sync=True)
+            ctl = FaultCtl.clean(self._fault_geom, self.n_sites)
+            reused, forced, stall = 0, injected, 0.0
+            self._site_staleness[:] = 0
+            self._force_recovery = False
+        else:
+            ctl = FaultCtl.expand(ev, self._fault_geom, self.n_sites)
+            reused, forced = injected, 0
+            stall = ev.stall_s(plan.delay_s)
+            self._site_staleness = np.where(ev.faulty_sites(),
+                                            self._site_staleness + 1, 0)
+            if int(self._site_staleness.max(initial=0)) >= plan.escalate_after:
+                escalate = True  # applied to the *next* epoch, below
+        self.state = dataclasses.replace(
+            self.state, faults=self.runtime.device_put_stacked(ctl))
+        return decision, injected, reused, forced, stall, escalate
+
     def train_epoch(self) -> EpochMetrics:
         decision = self._decide()
+        injected = reused = forced = 0
+        stall = 0.0
+        escalate = False
+        if self.fault_plan is not None:
+            (decision, injected, reused, forced, stall,
+             escalate) = self._arm_faults(decision)
         ts, ta = self._steps_for(decision)
         fn = ts if decision.sync else ta
         t0 = time.time()
@@ -261,6 +337,13 @@ class GNNTrainer:
         loss = float(loss)
         dt = time.time() - t0
         self._needs_sync = False
+        if escalate:
+            # staleness-as-recovery escalation: some site has been faulted
+            # for >= escalate_after consecutive epochs; the next epoch is a
+            # forced full-precision synchronous retry (BoundedStaleness also
+            # sees the counters via Telemetry.site_staleness).
+            self._needs_sync = True
+            self._force_recovery = True
         self._last_decision = decision
         self._absorb_site_stats()
         pb, eb = self.comm_bytes_per_epoch(decision)
@@ -268,7 +351,9 @@ class GNNTrainer:
                          "sync" if decision.sync else "async",
                          pb / 1e6, eb / 1e6,
                          bits_per_site=decision.bits_per_site(),
-                         policy=self.policy.name, ef_bits=decision.ef_bits)
+                         policy=self.policy.name, ef_bits=decision.ef_bits,
+                         faults_injected=injected, halos_reused=reused,
+                         forced_syncs=forced, stall_s=stall)
         self.history.append(m)
         self.epoch += 1
         return m
@@ -281,11 +366,14 @@ class GNNTrainer:
         return float(c) / max(float(n), 1.0)
 
     def fit(self, epochs: int, eval_every: int = 0) -> list[EpochMetrics]:
+        # auto-checkpoint cadence: explicit ``ckpt_every`` epochs (preemption-
+        # safe runs want every epoch) or 5 checkpoints over the run.
+        every = self.ckpt_every if self.ckpt_every else max(1, epochs // 5)
         for _ in range(epochs):
             m = self.train_epoch()
             if eval_every and self.epoch % eval_every == 0:
                 m.val_acc = self.evaluate("val")
-            if self.ckpt_dir and self.epoch % max(1, epochs // 5) == 0:
+            if self.ckpt_dir and self.epoch % every == 0:
                 self.save()
         return self.history
 
@@ -310,4 +398,10 @@ class GNNTrainer:
         self.epoch = int(meta.get("epoch", step))
         self._needs_sync = needs_sync or \
             meta.get("n_parts") != self.pg.plan.n_parts
+        if self.fault_plan is not None:
+            # staleness counters are host state, not checkpointed — start the
+            # resumed run conservatively clean (the first post-resume epoch is
+            # synchronous anyway via needs_sync/epoch-0 rules only if flagged).
+            self._site_staleness[:] = 0
+            self._force_recovery = False
         return True

@@ -35,8 +35,8 @@ from repro.core.sylvie import SylvieComm, SylvieConfig
 from repro.graph import formats, partition, synthetic
 from repro.models.gnn import blocks as B
 from repro.models.gnn.models import GCN, GraphSAGE
-from repro.serve import (EmbeddingServer, InferenceEngine, ServeConfig,
-                         closed_loop)
+from repro.serve import (EmbeddingServer, InferenceEngine, Rejection,
+                         ServeConfig, closed_loop)
 from repro.serve import delta as deltalib
 from repro.train import checkpoint as ckpt
 from repro.train.trainer import GNNTrainer
@@ -346,12 +346,15 @@ def test_server_admission_queue_rejects(tmp_path):
     eng, _ = InferenceEngine.from_checkpoint(tmp_path, model, pg)
     eng.full_sweep()
     srv = EmbeddingServer(eng, microbatch=4, max_queue=2)
-    assert srv.submit([1]) is not None
-    assert srv.submit([2]) is not None
-    assert srv.submit([3]) is None        # admission control
+    assert srv.submit([1]) == 0
+    assert srv.submit([2]) == 1
+    r = srv.submit([3])                   # admission control: typed rejection
+    assert isinstance(r, Rejection)
+    assert r.reason == "queue_full" and r.depth == 2
+    assert r.retry_after_hint >= 0.0
     assert srv.rejected == 1
     assert len(srv.drain()) == 2
-    assert srv.submit([3]) is not None    # capacity freed
+    assert srv.submit([3]) == 2           # capacity freed
 
 
 def test_closed_loop_report_and_determinism(tmp_path):

@@ -10,15 +10,21 @@
 #                              fails if the compact layout's wire-byte
 #                              reduction regresses past 60%; bench_serve fails
 #                              if the quantized delta refresh ships more than
-#                              10% of the full 32-bit sweep bytes (both write
-#                              untracked *.smoke.json; only full runs update
-#                              the tracked BENCH_*.json records)
+#                              10% of the full 32-bit sweep bytes; bench_chaos
+#                              fails if the armed fault path's epoch overhead
+#                              regresses (all write untracked *.smoke.json;
+#                              only full runs update the tracked BENCH_*.json
+#                              records)
 #   tools/ci.sh --policy       CommPolicy suite with 4 forced host devices
 #                              (runs the shard_map Uniform-parity check
 #                              in-process instead of skipping it)
 #   tools/ci.sh --serve        repro.serve suite with 4 forced host devices
 #                              (runs the shard_map serving-parity + delta
 #                              refresh checks in-process instead of skipping)
+#   tools/ci.sh --chaos        fault-tolerance suite with 4 forced host
+#                              devices (seeded injection, staleness recovery,
+#                              kill-and-resume), then the chaos launcher's
+#                              own self-check (repro.launch.chaos --ci)
 #   tools/ci.sh --docs         documentation lane: markdown link check over
 #                              README/DESIGN/CHANGES + execution of every
 #                              README ```bash block (quickstart, scenario
@@ -51,10 +57,17 @@ case "${1:-}" in
     XLA_FLAGS="--xla_force_host_platform_device_count=4${XLA_FLAGS:+ $XLA_FLAGS}" \
       exec python -m pytest -x -q tests/test_serve.py -m "not slow" "$@"
     ;;
+  --chaos)
+    shift
+    XLA_FLAGS="--xla_force_host_platform_device_count=4${XLA_FLAGS:+ $XLA_FLAGS}" \
+      python -m pytest -x -q tests/test_faults.py "$@"
+    exec python -m repro.launch.chaos --ci
+    ;;
   --bench-smoke)
     shift
     python -m benchmarks.bench_halo --smoke "$@"
-    exec python -m benchmarks.bench_serve --smoke "$@"
+    python -m benchmarks.bench_serve --smoke "$@"
+    exec python -m benchmarks.bench_chaos --smoke "$@"
     ;;
   --docs)
     shift
