@@ -1,0 +1,232 @@
+"""Embedding-store benchmark: sharded store + hot-node cache + streaming
+refresh under open-loop load.
+
+Tracks the scale-out serving trajectory by writing ``BENCH_store.json`` at
+the repo root (DESIGN.md §13 documents the schema). Three gated sections:
+
+* **bit-exactness** — the store-backed read path on ``yelp_like@small`` must
+  answer every query bit-identically to the materialized-table engine, after
+  a full sweep *and* after a k-hop delta refresh (the cache-coherence
+  invariant ``verify_store`` asserts row by row);
+* **hot-node cache** — on the seeded Zipf-skewed query workload the hot tier
+  (pinned head + LRU tail, capacity a fraction of the table) must serve
+  **>= 90%** of row reads from cache; misses are byte-accounted as the
+  modeled remote-tier traffic;
+* **open-loop SLO** — a ``ReplicaSet`` over one store sustains fixed-QPS
+  Poisson arrivals while the calibrated ``gdelt_like`` mutation stream
+  drives delta refreshes through the staleness bound: p99 must hold the
+  declared SLO, nothing may be lost, and no partition may end beyond
+  ``max_staleness`` sweeps stale (escalations to forced full sweeps are
+  counted, not forbidden — they are the bound working).
+
+``--smoke`` shrinks the workload/tier so CI can run it in seconds (writes
+the untracked ``BENCH_store.smoke.json``; only full runs update the tracked
+record).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import tempfile
+from pathlib import Path
+
+import numpy as np
+
+from repro import datasets
+from repro.core.sylvie import SylvieConfig
+from repro.models.gnn.models import PAPER_ARCHS
+from repro.serve import InferenceEngine, ReplicaSet, ServeConfig
+from repro.serve.loadgen import open_loop
+from repro.store import MutationStream, ShardedEmbeddingStore, zipf_popularity
+from repro.train.trainer import GNNTrainer
+
+ROOT = Path(__file__).resolve().parents[1]
+
+HIT_RATE_GATE = 0.90        # cache hit rate on the skewed workload
+CACHE_FRACTION = 0.50       # hot-tier capacity as a fraction of the table
+PIN_FRACTION = 0.15         # head of the popularity order pinned outright
+
+
+def _train(pg, td, *, epochs, seed):
+    model = PAPER_ARCHS["gcn"](pg.x.shape[-1], pg.n_classes)
+    tr = GNNTrainer(model, pg, SylvieConfig(mode="sync", bits=1),
+                    seed=seed, ckpt_dir=td)
+    tr.fit(epochs)
+    tr.save()
+    return model
+
+
+def bench_bitexact(ref: str, parts: int, epochs: int, seed: int) -> dict:
+    """Store-backed engine vs materialized engine: every logit row equal,
+    after the full sweep and again after a delta refresh."""
+    pg, _ = datasets.load_partitioned(ref, parts, seed=seed)
+    n_nodes = int(pg.part_of.shape[0])
+    with tempfile.TemporaryDirectory() as td:
+        model = _train(pg, td, epochs=epochs, seed=seed)
+        store = ShardedEmbeddingStore(cache_bytes=1 << 24)   # holds everything
+        eng_s, _ = InferenceEngine.from_checkpoint(
+            td, model, pg, config=ServeConfig(bits=1), seed=seed, store=store)
+        eng_m, _ = InferenceEngine.from_checkpoint(
+            td, model, pg, config=ServeConfig(bits=1), seed=seed)
+        eng_s.full_sweep()
+        eng_m.full_sweep()
+        ids = np.arange(n_nodes)
+        full_equal = bool(np.array_equal(eng_s.query(ids).logits,
+                                         eng_m.query(ids).logits))
+        rng = np.random.default_rng(seed + 1)
+        ch = rng.choice(n_nodes, size=max(1, n_nodes // 100), replace=False)
+        rows = rng.normal(0, 1, (ch.size, pg.x.shape[-1])).astype(np.float32)
+        eng_s.refresh(ch, rows)
+        eng_m.refresh(ch, rows)
+        delta_equal = bool(np.array_equal(eng_s.query(ids).logits,
+                                          eng_m.query(ids).logits))
+        verified = eng_s.verify_store()
+    return dict(graph=ref, nodes=n_nodes, full_equal=full_equal,
+                delta_equal=delta_equal, rows_verified=int(verified))
+
+
+def bench_cache(ref: str, parts: int, epochs: int, seed: int, *,
+                skew: float, queries: int) -> dict:
+    """Windowed hit rate of the hot tier on the seeded skewed workload:
+    pin the popularity head, LRU the rest, warm up, then measure."""
+    pg, _ = datasets.load_partitioned(ref, parts, seed=seed)
+    n_nodes = int(pg.part_of.shape[0])
+    with tempfile.TemporaryDirectory() as td:
+        model = _train(pg, td, epochs=epochs, seed=seed)
+        # capacity: a fraction of the logits table (the only table queried;
+        # pin_hot below pins logits only, so "emb" rows never take space —
+        # put_rows doesn't admit, only misses do)
+        row_bytes = pg.n_classes * 4
+        cache_bytes = int(CACHE_FRACTION * n_nodes) * row_bytes
+        store = ShardedEmbeddingStore(cache_bytes=cache_bytes)
+        eng, _ = InferenceEngine.from_checkpoint(
+            td, model, pg, config=ServeConfig(bits=1), seed=seed, store=store)
+        eng.full_sweep()
+        pop = zipf_popularity(n_nodes, skew, seed)
+        hot = np.argsort(pop)[::-1][:int(PIN_FRACTION * n_nodes)]
+        eng.pin_hot(hot, tables=("logits",))
+        rng = np.random.default_rng(seed + 2)
+        qids = rng.choice(n_nodes, size=(queries, 16), p=pop)
+        warm = queries // 5
+        for q in qids[:warm]:                      # warm the LRU tail
+            eng.query(q)
+        s0 = store.stats()
+        for q in qids[warm:]:
+            eng.query(q)
+        s1 = store.stats()
+    window = (s1.hits + s1.misses) - (s0.hits + s0.misses)
+    hit_rate = ((s1.hits - s0.hits) / window) if window else 0.0
+    return dict(graph=ref, nodes=n_nodes, skew=float(skew),
+                queries=int(queries), warmup_queries=int(warm),
+                cache_bytes=int(cache_bytes), pinned_rows=int(hot.size),
+                hit_rate=float(hit_rate),
+                miss_bytes=int(s1.miss_bytes - s0.miss_bytes),
+                evictions=int(s1.evictions - s0.evictions),
+                table_bytes=int(n_nodes * row_bytes))
+
+
+def bench_open_loop(ref: str, parts: int, epochs: int, seed: int, *,
+                    qps: float, requests: int, slo_ms: float,
+                    stream_events: int, window_s: float,
+                    max_staleness: int, replicas: int) -> dict:
+    """ReplicaSet over one store under fixed-QPS Poisson arrivals while the
+    calibrated mutation stream refreshes through the staleness bound."""
+    g, stream = MutationStream.from_workload(ref, seed=seed)
+    pg, _ = datasets.load_partitioned(ref, parts, seed=seed)
+    n_nodes = int(pg.part_of.shape[0])
+    with tempfile.TemporaryDirectory() as td:
+        model = _train(pg, td, epochs=epochs, seed=seed)
+        store = ShardedEmbeddingStore(cache_bytes=1 << 24)
+        eng, _ = InferenceEngine.from_checkpoint(
+            td, model, pg,
+            config=ServeConfig(bits=1, max_staleness=max_staleness),
+            seed=seed, store=store)
+        eng.full_sweep()
+        feed = stream.batches(stream_events, window_s,
+                              rows_of=eng.feature_rows)
+        # one delta up front so the traced refresh executable is compiled
+        # before the clock starts — compile time is not a serving cost
+        t0, ids0, rows0 = feed[0]
+        eng.refresh(ids0, rows0)
+        rs = ReplicaSet(eng, n_replicas=replicas, microbatch=128)
+        load = open_loop(rs, n_nodes, qps=qps, requests=requests, batch=16,
+                         seed=seed, skew=stream.skew, slo_ms=slo_ms,
+                         feed=feed[1:])
+        staleness = [int(s) for s in eng.part_staleness]
+    within_bound = max(staleness, default=0) <= max_staleness
+    return dict(graph=ref, nodes=n_nodes, replicas=int(replicas),
+                max_staleness=int(max_staleness),
+                stream=dict(events=int(stream_events),
+                            window_s=float(window_s), rate=stream.rate,
+                            feat_frac=stream.feat_frac, skew=stream.skew),
+                part_staleness=staleness,
+                staleness_within_bound=bool(within_bound),
+                per_replica=rs.per_replica(), load=load)
+
+
+def run(smoke: bool = False) -> dict:
+    if smoke:
+        exact_ref, stream_ref = "yelp_like@smoke", "gdelt_like@smoke"
+        parts, epochs = 4, 2
+        # stream_events is sized so refresh work (~200 ms per delta on 4
+        # forced host devices) doesn't saturate the arrival window: the SLO
+        # prices in arrivals queued behind one refresh stall plus drain
+        queries, requests, stream_events = 400, 150, 30
+        qps, slo_ms, window_s = 300.0, 600.0, 0.25
+    else:
+        exact_ref, stream_ref = "yelp_like@small", "gdelt_like@small"
+        parts, epochs = 4, 3
+        queries, requests, stream_events = 1500, 400, 150
+        qps, slo_ms, window_s = 400.0, 750.0, 0.5
+    seed = 0
+    skew = 1.1      # gdelt_like's calibrated query/update skew
+
+    exact = bench_bitexact(exact_ref, parts, epochs, seed)
+    cache = bench_cache(exact_ref, parts, epochs, seed,
+                        skew=skew, queries=queries)
+    ol = bench_open_loop(stream_ref, parts, epochs, seed, qps=qps,
+                         requests=requests, slo_ms=slo_ms,
+                         stream_events=stream_events, window_s=window_s,
+                         max_staleness=8, replicas=2)
+
+    gates = dict(
+        bitexact=exact["full_equal"] and exact["delta_equal"],
+        hit_rate=cache["hit_rate"] >= HIT_RATE_GATE,
+        slo=bool(ol["load"]["slo_pass"]),
+        staleness=ol["staleness_within_bound"])
+    rec = dict(config=dict(exact_graph=exact_ref, stream_graph=stream_ref,
+                           parts=parts, arch="gcn", train_epochs=epochs,
+                           smoke=smoke, seed=seed),
+               bitexact=exact, cache=cache, open_loop=ol, gates=gates)
+
+    print(f"== bench_store ({exact_ref} / {stream_ref}, P={parts}) ==")
+    print(f"bit-exact: full={exact['full_equal']} "
+          f"delta={exact['delta_equal']} "
+          f"({exact['rows_verified']} rows verified)")
+    print(f"cache: hit rate {cache['hit_rate']:.3f} "
+          f"(gate >= {HIT_RATE_GATE}), miss {cache['miss_bytes']/1e3:.1f} kB,"
+          f" {cache['evictions']} evictions, capacity "
+          f"{cache['cache_bytes']/1e3:.1f}/{cache['table_bytes']/1e3:.1f} kB")
+    lo = ol["load"]
+    print(f"open loop: {lo['qps_offered']:.0f} qps offered, p99 "
+          f"{lo['p99_ms']:.1f} ms vs SLO {lo['slo_ms']:.0f} ms "
+          f"({'PASS' if lo['slo_pass'] else 'FAIL'}), {lo['completed']} "
+          f"completed, {lo['lost']} lost, {lo['refreshes']} refreshes "
+          f"({lo['refresh_escalations']} escalated), lag max "
+          f"{lo['refresh_lag_max_s']*1e3:.0f} ms")
+    print(f"staleness: {ol['part_staleness']} "
+          f"(bound {ol['max_staleness']}) -> "
+          f"{'OK' if ol['staleness_within_bound'] else 'VIOLATED'}")
+
+    out = ROOT / ("BENCH_store.smoke.json" if smoke else "BENCH_store.json")
+    out.write_text(json.dumps(rec, indent=1, default=float))
+    failed = sorted(k for k, ok in gates.items() if not ok)
+    assert not failed, f"bench_store gates failed: {failed}"
+    return rec
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny workload (CI freshness check)")
+    run(**vars(ap.parse_args()))

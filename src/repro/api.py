@@ -16,7 +16,9 @@ both. The per-epoch communication schedule is a pluggable
 :class:`~repro.policy.base.CommPolicy` (``policy=repro.Uniform(bits=1)``,
 ``repro.BoundedStaleness(eps_s=4)``, ...). See DESIGN.md §1/§4a for the
 Runtime / HaloBackend / CommPolicy architecture, §9 for named workloads
-(:mod:`repro.datasets`) and the scenario runner.
+(:mod:`repro.datasets`) and the scenario runner, §13 for the serving-side
+embedding store (``repro.ShardedEmbeddingStore`` + ``repro.MutationStream``,
+re-exported here).
 """
 from __future__ import annotations
 
@@ -32,6 +34,8 @@ from .graph import partition as partlib
 from .policy import (AdaQPVariance, BoundedStaleness, Chain,  # noqa: F401
                      CommPolicy, EpochDecision, SiteDecision, SiteStats,
                      Telemetry, Uniform, Warmup)
+from .store import (LRUCache, Mutation, MutationStream,  # noqa: F401
+                    ShardedEmbeddingStore, StoreBackend, StoreStats)
 from .train.trainer import GNNTrainer
 
 

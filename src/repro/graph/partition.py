@@ -114,6 +114,18 @@ class PartitionedGraph:
         return out
 
 
+def global_to_slot(pg: PartitionedGraph) -> tuple[np.ndarray, np.ndarray]:
+    """``(part_of, slot_of)`` int64 maps: global node id -> (partition, local
+    slot). The O(lookup) request-path index shared by the inference engine,
+    its store readers, and the sharded embedding store (a store shard is
+    addressed by exactly these ``(part, slot)`` coordinates)."""
+    n = int(pg.part_of.shape[0])
+    slot_of = np.full(n, -1, dtype=np.int64)
+    pi, li = np.nonzero(pg.node_mask)
+    slot_of[pg.global_ids[pi, li]] = li
+    return pg.part_of.astype(np.int64), slot_of
+
+
 def assign_parts(g: Graph, n_parts: int, method: str = "block", seed: int = 0) -> np.ndarray:
     """Partition assignment. ``block`` = contiguous id ranges (our synthetic
     generators have id locality, so this approximates a METIS-quality cut);

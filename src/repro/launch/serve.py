@@ -20,11 +20,20 @@ mode cells over one workload, one report JSON per cell plus a summary, under
 ``artifacts/scenarios/serve_<NAME>/`` (the serving counterpart of
 ``launch/scenarios.py``).
 
+``--store`` swaps the resident table for a sharded embedding store with a
+hot-node cache (``--cache-kb``); ``--replicas N`` fronts the engine with N
+load-balanced server replicas; ``--open-loop`` replaces the closed loop with
+fixed-QPS Poisson arrivals (``--qps``, ``--slo-ms``, ``--skew``) and can
+drive a seeded mutation stream through the refresh path while serving
+(``--stream-events``). See DESIGN.md §13.
+
 Examples::
 
     python -m repro.launch.serve --graph yelp_like@small
     python -m repro.launch.serve --graph yelp_like@small --bits 32 --requests 500
     python -m repro.launch.serve --matrix smoke
+    python -m repro.launch.serve --graph gdelt_like@smoke --store --replicas 2 \\
+        --open-loop --qps 300 --slo-ms 250 --skew 1.1 --stream-events 60
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
         python -m repro.launch.serve --graph yelp_like@smoke --runtime sharded
 """
@@ -71,8 +80,9 @@ def _ensure_checkpoint(ckpt_dir: Path, model, pg, *, train_epochs: int,
 def serve_once(args) -> dict:
     """The CLI's single-cell flow; returns the serving report dict."""
     from ..dist.runtime import Runtime
-    from ..serve import EmbeddingServer, InferenceEngine, ServeConfig
-    from ..serve.loadgen import closed_loop
+    from ..serve import (EmbeddingServer, InferenceEngine, ReplicaSet,
+                         ServeConfig)
+    from ..serve.loadgen import closed_loop, open_loop
 
     pg, archs = _load(args.graph, args.parts, args.seed)
     model = archs[args.arch](pg.x.shape[-1], pg.n_classes)
@@ -85,17 +95,43 @@ def serve_once(args) -> dict:
     runtime = Runtime.sharded(args.parts) if args.runtime == "sharded" \
         else Runtime.simulated(args.parts)
     cfg = ServeConfig(bits=args.bits, max_staleness=args.max_staleness)
+    store = None
+    if args.store:
+        from ..store import ShardedEmbeddingStore
+        store = ShardedEmbeddingStore(cache_bytes=args.cache_kb << 10)
     engine, meta = InferenceEngine.from_checkpoint(
-        ckpt_dir, model, pg, config=cfg, runtime=runtime, seed=args.seed)
+        ckpt_dir, model, pg, config=cfg, runtime=runtime, seed=args.seed,
+        store=store)
     sweep = engine.full_sweep()
     n_nodes = int(pg.part_of.shape[0])
 
-    server = EmbeddingServer(engine, microbatch=args.microbatch,
-                             max_queue=args.max_queue)
-    load = closed_loop(server, n_nodes, clients=args.clients,
-                       batch=args.batch, requests=args.requests,
-                       seed=args.seed, refresh_every=args.refresh_every,
-                       refresh_nodes=args.refresh_nodes)
+    if args.replicas > 1:
+        server = ReplicaSet(engine, n_replicas=args.replicas,
+                            microbatch=args.microbatch,
+                            max_queue=args.max_queue)
+    else:
+        server = EmbeddingServer(engine, microbatch=args.microbatch,
+                                 max_queue=args.max_queue)
+    if args.open_loop:
+        feed = None
+        if args.stream_events:
+            from ..datasets import registry
+            from ..store import MutationStream
+            name, tier = registry.parse(args.graph)
+            stream_kw = dict(registry.get(name).stream.get(tier, {}))
+            stream = MutationStream(n_nodes, pg.x.shape[-1],
+                                    seed=args.seed + 2, **stream_kw)
+            feed = stream.batches(args.stream_events, args.stream_window,
+                                  rows_of=engine.feature_rows)
+        load = open_loop(server, n_nodes, qps=args.qps,
+                         requests=args.requests, batch=args.batch,
+                         seed=args.seed, skew=args.skew,
+                         slo_ms=args.slo_ms, feed=feed)
+    else:
+        load = closed_loop(server, n_nodes, clients=args.clients,
+                           batch=args.batch, requests=args.requests,
+                           seed=args.seed, refresh_every=args.refresh_every,
+                           refresh_nodes=args.refresh_nodes)
 
     # one measured delta refresh for the byte comparison; the interleaved
     # load-phase refreshes may have run the staleness clock up to the bound,
@@ -120,16 +156,38 @@ def serve_once(args) -> dict:
         "delta_vs_full_bytes": delta.wire_bytes
         / max(engine.full_sweep_wire_bytes(), 1),
     }
+    if store is not None:
+        report["store"] = store.stats().as_dict()
+        report["store"]["shard_bytes"] = store.shard_bytes()
+    if args.replicas > 1:
+        report["replicas"] = server.per_replica()
     print(f"== serve {args.arch} on {args.graph} (P={args.parts}, "
-          f"{args.bits}-bit, {args.runtime}) ==")
+          f"{args.bits}-bit, {args.runtime}"
+          + (f", store cache {args.cache_kb} kB" if store is not None else "")
+          + (f", {args.replicas} replicas" if args.replicas > 1 else "")
+          + ") ==")
     print(f"checkpoint: {'trained now' if trained else 'restored'} "
           f"(epoch {meta.get('epoch', '?')}, format v"
           f"{meta.get('format_version')})")
     print(f"sweep {sweep.seconds*1e3:.1f} ms, full refresh "
           f"{report['full_sweep_wire_bytes']/1e3:.1f} kB")
-    print(f"load: {load['qps']:.0f} qps  p50 {load['p50_ms']:.3f} ms  "
-          f"p99 {load['p99_ms']:.3f} ms  ({load['requests']} requests, "
-          f"{load['rejected']} rejected)")
+    if args.open_loop:
+        print(f"open loop: offered {load['qps_offered']:.0f} qps, achieved "
+              f"{load['qps_achieved']:.0f} qps  p50 {load['p50_ms']:.3f} ms  "
+              f"p99 {load['p99_ms']:.3f} ms  ({load['completed']} completed, "
+              f"{load['lost']} lost, {load['refreshes']} refreshes)")
+        if load["slo_pass"] is not None:
+            print(f"SLO {load['slo_ms']:.1f} ms: "
+                  f"{'PASS' if load['slo_pass'] else 'FAIL'}")
+    else:
+        print(f"load: {load['qps']:.0f} qps  p50 {load['p50_ms']:.3f} ms  "
+              f"p99 {load['p99_ms']:.3f} ms  ({load['requests']} requests, "
+              f"{load['rejected']} rejected)")
+    if store is not None:
+        s = report["store"]
+        print(f"store: hit rate {s['hit_rate']:.3f}, miss bytes "
+              f"{s['miss_bytes']/1e3:.1f} kB, cached "
+              f"{s['cached_bytes']/1e3:.1f} of {s['shard_bytes']/1e3:.1f} kB")
     print(f"delta refresh ({delta.changed} nodes): "
           f"{delta.wire_bytes/1e3:.2f} kB = "
           f"{100*report['delta_vs_full_bytes']:.1f}% of a full sweep")
@@ -256,6 +314,29 @@ def main() -> None:
     ap.add_argument("--refresh-every", type=int, default=None,
                     help="interleave a delta refresh every N completions")
     ap.add_argument("--refresh-nodes", type=int, default=8)
+    ap.add_argument("--store", action="store_true",
+                    help="serve through a sharded embedding store "
+                         "(repro.store) instead of the resident table")
+    ap.add_argument("--cache-kb", type=int, default=4096,
+                    help="store hot-node cache capacity (kB)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="front the engine with N load-balanced server "
+                         "replicas (ReplicaSet) when > 1")
+    ap.add_argument("--open-loop", action="store_true",
+                    help="sustained open-loop load (fixed-QPS Poisson "
+                         "arrivals) instead of the closed loop")
+    ap.add_argument("--qps", type=float, default=500.0,
+                    help="open-loop offered rate (arrivals/s)")
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="open-loop p99 latency SLO gate (ms)")
+    ap.add_argument("--skew", type=float, default=0.0,
+                    help="open-loop Zipf query skew (0 = uniform)")
+    ap.add_argument("--stream-events", type=int, default=0,
+                    help="open-loop: drive N mutation-stream events through "
+                         "server.refresh while serving (uses the workload's "
+                         "stream calibration when it declares one)")
+    ap.add_argument("--stream-window", type=float, default=0.25,
+                    help="mutation-stream consumption window (s)")
     ap.add_argument("--matrix", default=None,
                     help="run a named serving matrix instead "
                          f"({sorted(SERVE_MATRICES)})")

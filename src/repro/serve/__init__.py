@@ -8,9 +8,14 @@ The serving-time counterpart of the Sylvie training stack (DESIGN.md §10):
 * :mod:`~repro.serve.delta` — incremental k-hop delta refresh planning +
   exact wire accounting, with a staleness bound forcing periodic full sweeps;
 * :class:`~repro.serve.server.EmbeddingServer` — microbatched,
-  admission-controlled in-process request path;
-* :mod:`~repro.serve.loadgen` — seeded closed-loop load generator
-  (QPS / p50 / p99 / refresh bytes).
+  admission-controlled in-process request path —
+  :class:`~repro.serve.server.ReplicaSet` runs N of them over one store
+  behind the same interface;
+* :mod:`~repro.serve.loadgen` — seeded load generators: closed-loop
+  (offered load adapts to service rate) and open-loop (fixed-QPS Poisson
+  arrivals with a latency-SLO pass/fail gate);
+* :class:`~repro.serve.engine.StoreReader` — query-only replica view over a
+  store-backed engine (DESIGN.md §13).
 
 ::
 
@@ -26,13 +31,15 @@ from __future__ import annotations
 
 from . import delta, loadgen  # noqa: F401
 from .delta import RefreshPlan, RefreshReport  # noqa: F401
-from .engine import InferenceEngine, QueryResult, ServeComm, ServeConfig  # noqa: F401
-from .loadgen import closed_loop  # noqa: F401
-from .server import (EmbeddingServer, Rejection, Request,  # noqa: F401
-                     Response)
+from .engine import (InferenceEngine, QueryResult, ServeComm,  # noqa: F401
+                     ServeConfig, StoreReader)
+from .loadgen import closed_loop, open_loop  # noqa: F401
+from .server import (EmbeddingServer, Rejection, ReplicaSet,  # noqa: F401
+                     Request, Response)
 
 __all__ = [
     "InferenceEngine", "ServeConfig", "ServeComm", "QueryResult",
-    "RefreshPlan", "RefreshReport", "EmbeddingServer", "Rejection",
-    "Request", "Response", "closed_loop", "delta", "loadgen",
+    "StoreReader", "RefreshPlan", "RefreshReport", "EmbeddingServer",
+    "ReplicaSet", "Rejection", "Request", "Response", "closed_loop",
+    "open_loop", "delta", "loadgen",
 ]

@@ -42,7 +42,7 @@ from ..core.exchange import exchange_halo, exchange_quantized_halo, \
 from ..core.staleness import HaloState
 from ..core.sylvie import SylvieComm, SylvieConfig
 from ..dist.runtime import Runtime
-from ..graph.partition import PartitionedGraph
+from ..graph.partition import PartitionedGraph, global_to_slot, khop_frontier
 from ..models.gnn import blocks as B
 from ..policy.base import EpochDecision, validate_decision
 from ..train import checkpoint as ckpt
@@ -152,10 +152,15 @@ class InferenceEngine:
         print(rep.kind, rep.wire_bytes)
     """
 
+    # store table names: cached logits + the deepest cached embedding layer
+    # (what ``embeddings(site=-1)`` serves).
+    STORE_TABLES = ("logits", "emb")
+
     def __init__(self, model, pg: PartitionedGraph, params,
                  config: Optional[ServeConfig] = None,
                  decision: Optional[EpochDecision] = None,
-                 runtime: Optional[Runtime] = None, seed: int = 0):
+                 runtime: Optional[Runtime] = None, seed: int = 0,
+                 store=None):
         self.model = model
         self.pg = pg
         self.config = cfg = config if config is not None else ServeConfig()
@@ -181,11 +186,7 @@ class InferenceEngine:
         self.key = jax.random.PRNGKey(seed)
 
         # global id -> (partition, local slot): the O(lookup) request path
-        n = int(pg.part_of.shape[0])
-        self._slot_of = np.full(n, -1, dtype=np.int64)
-        pi, li = np.nonzero(pg.node_mask)
-        self._slot_of[pg.global_ids[pi, li]] = li
-        self._part_of = pg.part_of.astype(np.int64)
+        self._part_of, self._slot_of = global_to_slot(pg)
 
         self._sweep = self._build_sweep()
         # refresh planning amortizes the O(E) edge/ownership reconstruction
@@ -207,6 +208,11 @@ class InferenceEngine:
         # staleness counts sweeps served from the frozen cache.
         self._down = np.zeros(p, dtype=bool)
         self._part_staleness = np.zeros(p, dtype=np.int64)
+        # optional sharded embedding store (repro.store): node lookups read
+        # through it, sweeps publish into it (see attach_store)
+        self.store = None
+        if store is not None:
+            self.attach_store(store)
 
     # ------------------------------------------------------------------
     # the sweep executable (shared by full sweeps and delta refreshes)
@@ -225,8 +231,9 @@ class InferenceEngine:
 
         return self.runtime.shard_serve_fn(sweep_fn)
 
-    def _run(self, refresh: deltalib.RefreshPlan, *, kind: str,
-             forced: bool) -> deltalib.RefreshReport:
+    def _run(self, refresh: deltalib.RefreshPlan, *, kind: str, forced: bool,
+             changed_ids: Optional[np.ndarray] = None
+             ) -> deltalib.RefreshReport:
         t0 = time.time()
         key = jax.random.fold_in(self.key, self._refresh_count)
         self._refresh_count += 1
@@ -251,6 +258,10 @@ class InferenceEngine:
         self._logits_host = fresh_logits
         self._part_staleness = np.where(self._down,
                                         self._part_staleness + 1, 0)
+        if self.store is not None:
+            # full sweeps republish every row; deltas only the rows the
+            # sweep could have changed (the logits-depth frontier)
+            self._publish(None if kind == "full" else changed_ids)
         pb, eb, mb = deltalib.refresh_wire_bytes(
             self.block.plan.real_rows, self.site_dims, self.decision, refresh,
             self.config.scale_dtype)
@@ -267,8 +278,8 @@ class InferenceEngine:
                         config: Optional[ServeConfig] = None,
                         decision: Optional[EpochDecision] = None,
                         runtime: Optional[Runtime] = None,
-                        step: Optional[int] = None, seed: int = 0
-                        ) -> tuple["InferenceEngine", dict]:
+                        step: Optional[int] = None, seed: int = 0,
+                        store=None) -> tuple["InferenceEngine", dict]:
         """Train -> save -> serve handoff: restore only the model parameters
         (``checkpoint.restore_for_inference``) and build an engine. Returns
         ``(engine, checkpoint_meta)``."""
@@ -276,7 +287,7 @@ class InferenceEngine:
         params, meta = ckpt.restore_for_inference(ckpt_dir, example, step=step)
         return InferenceEngine(model, pg, params, config=config,
                                decision=decision, runtime=runtime,
-                               seed=seed), meta
+                               seed=seed, store=store), meta
 
     def full_sweep(self) -> deltalib.RefreshReport:
         """Recompute every cache from the current features (all boundary rows
@@ -316,7 +327,7 @@ class InferenceEngine:
             self._since_full = 0
             return rep
         plan = self._frontier.plan_refresh(ids, self.n_sites)
-        rep = self._run(plan, kind="delta", forced=False)
+        rep = self._run(plan, kind="delta", forced=False, changed_ids=ids)
         self._since_full += 1
         return rep
 
@@ -341,6 +352,116 @@ class InferenceEngine:
         """(P,) sweeps served from frozen cache per partition (0 = fresh)."""
         return self._part_staleness.copy()
 
+    # ------------------------------------------------------------------
+    # sharded embedding store (repro.store)
+    # ------------------------------------------------------------------
+    def attach_store(self, store) -> None:
+        """Serve node lookups through a :class:`repro.store.StoreBackend`.
+
+        The engine stays the single *writer*: every sweep publishes the rows
+        it could have changed into the store's per-partition shards (tables
+        ``"logits"`` and ``"emb"``); ``query``/``embeddings(site=-1)`` then
+        *read* through the store's hot-node cache instead of the
+        materialized tables — bit-exact by construction (``verify_store``
+        asserts it, ``BENCH_store.json`` gates it). Attach before the first
+        sweep, or re-publish with ``full_sweep()``."""
+        self.store = store
+        if self._logits_host is not None:
+            self._publish(None)
+
+    def _publish(self, changed_ids: Optional[np.ndarray]) -> None:
+        """Write the rows the last sweep could have changed into the store.
+
+        ``changed_ids=None`` republishes every real row (full sweep). For a
+        delta, the superset of rows whose cached values may differ is the
+        ``n_sites``-hop frontier of the changed set — one hop per layer plus
+        the logits readout (unaffected rows are bit-stable under
+        deterministic rounding, the delta==full guarantee)."""
+        st = self.store
+        p_count = self.pg.plan.n_parts
+        tables = {"logits": self._logits_host,
+                  "emb": np.asarray(jax.device_get(self._layers[-1]))}
+        for name, arr in tables.items():
+            if not st.has_table(name):
+                st.create_table(name, part_rows=(arr.shape[1],) * p_count,
+                                d=arr.shape[2], dtype=arr.dtype)
+        if changed_ids is None:
+            for p in range(p_count):
+                slots = np.nonzero(self.pg.node_mask[p])[0]
+                for name, arr in tables.items():
+                    st.put_rows(name, p, slots, arr[p, slots])
+            return
+        fr = khop_frontier(self.pg, changed_ids, self.n_sites,
+                           edges=self._frontier.edges)[-1]
+        ids = np.nonzero(fr)[0]
+        parts, slots = self._part_of[ids], self._slot_of[ids]
+        for p in np.unique(parts):
+            sl = slots[parts == p]
+            for name, arr in tables.items():
+                st.put_rows(name, int(p), sl, arr[int(p), sl])
+
+    def _store_lookup(self, table: str, ids: np.ndarray) -> np.ndarray:
+        """Batched store read in request order (one ``get_rows`` per
+        partition the batch touches)."""
+        parts, slots = self._part_of[ids], self._slot_of[ids]
+        out: Optional[np.ndarray] = None
+        for p in np.unique(parts):
+            sel = parts == p
+            rows = self.store.get_rows(table, int(p), slots[sel])
+            if out is None:
+                out = np.empty((ids.size,) + rows.shape[1:], rows.dtype)
+            out[sel] = rows
+        return out
+
+    def pin_hot(self, node_ids, tables: Optional[tuple] = None) -> None:
+        """Pin the hot nodes' rows into the store's pinned tier (they stay
+        materialized and are write-through refreshed by every publish)."""
+        if self.store is None:
+            raise RuntimeError("no store attached")
+        self._require_swept()
+        ids = self._check_ids(node_ids)
+        parts, slots = self._part_of[ids], self._slot_of[ids]
+        for p in np.unique(parts):
+            for table in tables or self.STORE_TABLES:
+                self.store.pin(table, int(p), slots[parts == p])
+
+    def verify_store(self) -> int:
+        """Assert the store-backed read path is bit-exact vs the materialized
+        tables: every shard row equals the engine's row, and every cached row
+        equals its shard row. Returns the number of rows verified."""
+        if self.store is None:
+            raise RuntimeError("no store attached")
+        self._require_swept()
+        st = self.store
+        peek = getattr(st, "peek_rows", st.get_rows)
+        tables = {"logits": self._logits_host,
+                  "emb": np.asarray(jax.device_get(self._layers[-1]))}
+        checked = 0
+        for p in range(self.pg.plan.n_parts):
+            slots = np.nonzero(self.pg.node_mask[p])[0]
+            for name, arr in tables.items():
+                if not np.array_equal(peek(name, p, slots), arr[p, slots]):
+                    raise AssertionError(
+                        f"store table {name!r} shard {p} diverged from the "
+                        f"materialized path")
+                checked += slots.size
+        coherent = getattr(st, "check_coherence", None)
+        if coherent is not None:
+            checked += coherent()
+        return checked
+
+    def reader(self) -> "InferenceEngine | StoreReader":
+        """A query-only replica view: a :class:`StoreReader` over the
+        attached store, or the engine itself when none is attached (the
+        materialized tables are then the only copy)."""
+        return StoreReader(self) if self.store is not None else self
+
+    def feature_rows(self, node_ids) -> np.ndarray:
+        """Current feature rows for a batch of global node ids (what a
+        mutation-stream edge *touch* re-submits — see repro.store.stream)."""
+        ids = self._check_ids(node_ids)
+        return self._x_host[self._part_of[ids], self._slot_of[ids]].copy()
+
     def _require_swept(self):
         if self._logits_host is None:
             raise RuntimeError("no caches yet — call full_sweep() first")
@@ -357,10 +478,15 @@ class InferenceEngine:
 
     def query(self, node_ids) -> QueryResult:
         """Logits for a batch of global node ids — a cache lookup, no graph
-        compute."""
+        compute. With a store attached the rows come through its hot-node
+        cache (miss -> shard fetch); otherwise from the materialized table.
+        Both paths are bit-identical (``verify_store``)."""
         self._require_swept()
         ids = self._check_ids(node_ids)
-        out = self._logits_host[self._part_of[ids], self._slot_of[ids]]
+        if self.store is not None and ids.size:
+            out = self._store_lookup("logits", ids)
+        else:
+            out = self._logits_host[self._part_of[ids], self._slot_of[ids]]
         return QueryResult(node_ids=ids, logits=out,
                            staleness=self._part_staleness[
                                self._part_of[ids]].copy())
@@ -368,10 +494,14 @@ class InferenceEngine:
     def embeddings(self, node_ids, site: int = -1) -> np.ndarray:
         """Cached embeddings entering exchange site ``site`` for a batch of
         global node ids (``-1`` = last site, the deepest cached layer).
-        Gathers the requested rows on device — only O(batch * d) crosses to
-        the host, never the full layer table."""
+        The deepest layer is store-served when a store is attached (the
+        ``"emb"`` table); other sites gather the requested rows on device —
+        only O(batch * d) crosses to the host, never the full layer table."""
         self._require_swept()
         ids = self._check_ids(node_ids)
+        if self.store is not None and ids.size and \
+                site in (-1, self.n_sites - 1):
+            return self._store_lookup("emb", ids)
         rows = self._layers[site][self._part_of[ids], self._slot_of[ids]]
         return np.asarray(jax.device_get(rows))
 
@@ -389,3 +519,44 @@ class InferenceEngine:
             deltalib.plan_full(self.pg, self.n_sites),
             self.config.scale_dtype)
         return pb + eb + mb
+
+
+class StoreReader:
+    """Query-only replica view over an engine's published store tables.
+
+    A serving replica needs exactly three things: the ``(part, slot)`` index,
+    the store's read path, and the writer's health/staleness stamps. A
+    ``StoreReader`` carries nothing else — it cannot sweep, refresh, or mark
+    partitions down, so any number of them can front one store while the
+    engine remains the single writer (``ReplicaSet`` in ``server.py`` builds
+    one per replica via ``engine.reader()``)."""
+
+    def __init__(self, engine: InferenceEngine):
+        if engine.store is None:
+            raise ValueError("engine has no store attached")
+        self._engine = engine
+        self.store = engine.store
+        self.pg = engine.pg
+
+    def query(self, node_ids) -> QueryResult:
+        """Store-backed logits lookup — same contract as ``engine.query``."""
+        eng = self._engine
+        eng._require_swept()
+        ids = eng._check_ids(node_ids)
+        out = eng._store_lookup("logits", ids) if ids.size else \
+            np.empty((0, eng._logits_host.shape[-1]), np.float32)
+        return QueryResult(node_ids=ids, logits=out,
+                           staleness=eng._part_staleness[
+                               eng._part_of[ids]].copy())
+
+    def embeddings(self, node_ids, site: int = -1) -> np.ndarray:
+        return self._engine.embeddings(node_ids, site=site)
+
+    def down_partitions(self) -> np.ndarray:
+        """Health rides the writer's state machine (servers fronting a
+        reader recompute DEGRADED/HEALTHY from the same source)."""
+        return self._engine.down_partitions()
+
+    @property
+    def part_staleness(self) -> np.ndarray:
+        return self._engine.part_staleness

@@ -95,15 +95,21 @@ class EmbeddingServer:
     STEP_EMA = 0.7
 
     def __init__(self, engine, microbatch: int = 128, max_queue: int = 1024,
-                 clock: Optional[Callable[[], float]] = None):
+                 clock: Optional[Callable[[], float]] = None,
+                 id_start: int = 0, id_stride: int = 1):
         if microbatch < 1 or max_queue < 1:
             raise ValueError("microbatch and max_queue must be >= 1")
+        if id_stride < 1:
+            raise ValueError("id_stride must be >= 1")
         self.engine = engine
         self.microbatch = microbatch
         self.max_queue = max_queue
         self.clock = clock if clock is not None else time.perf_counter
         self._queue: deque[Request] = deque()
-        self._next_id = 0
+        # replicas in a ReplicaSet interleave id spaces (start=i, stride=N)
+        # so request ids stay globally unique across the set
+        self._next_id = id_start
+        self._id_stride = id_stride
         self.accepted = 0
         self.rejected = 0
         self.served = 0
@@ -142,7 +148,7 @@ class EmbeddingServer:
         if len(self._queue) >= self.max_queue:
             return self._reject("queue_full")
         rid = self._next_id
-        self._next_id += 1
+        self._next_id += self._id_stride
         now = self.clock()
         deadline = None if deadline_s is None else now + float(deadline_s)
         self._queue.append(Request(rid, ids, now, deadline))
@@ -240,3 +246,142 @@ class EmbeddingServer:
         """Stop admitting (submit returns Rejection("draining", ...)); the
         queue still serves out via ``step``/``drain``."""
         self.health = DRAINING
+
+
+class ReplicaSet:
+    """N admission-queued server replicas over one engine/store, behind the
+    single-server interface (``submit``/``step``/``drain``/``refresh``) so
+    the load generators drive either transparently.
+
+    Each replica is an :class:`EmbeddingServer` over ``engine.reader()`` — a
+    query-only :class:`~repro.serve.engine.StoreReader` when the engine has a
+    store attached (N replicas, one store), the engine itself otherwise.
+    Admission is **load-balanced**: a submit goes to the least-loaded replica
+    whose health admits it (draining replicas are skipped — the per-replica
+    health state machine is the single-server one), so one slow or draining
+    replica sheds load to its peers instead of rejecting it. Request ids are
+    globally unique across the set (interleaved id spaces). Refreshes go to
+    the one writer — the engine — through the same degrade-on-failure wrapper
+    a single server uses, then every replica recomputes its health.
+
+    Example::
+
+        rs = ReplicaSet(engine, n_replicas=3, microbatch=64)
+        rid = rs.submit([1, 2, 3])
+        rs.replicas[1].start_draining()       # peers absorb its load
+        responses = rs.drain()
+    """
+
+    def __init__(self, engine, n_replicas: int = 2, *, microbatch: int = 128,
+                 max_queue: int = 1024,
+                 clock: Optional[Callable[[], float]] = None):
+        if n_replicas < 1:
+            raise ValueError("n_replicas must be >= 1")
+        self.engine = engine
+        reader = getattr(engine, "reader", None)
+        self.replicas = [
+            EmbeddingServer(reader() if reader is not None else engine,
+                            microbatch=microbatch, max_queue=max_queue,
+                            clock=clock, id_start=i, id_stride=n_replicas)
+            for i in range(n_replicas)]
+        self.refresh_failures = 0
+        self._rr = 0            # step() rotation so no replica starves
+
+    # -- aggregate state ----------------------------------------------------
+    @property
+    def depth(self) -> int:
+        return sum(s.depth for s in self.replicas)
+
+    @property
+    def health(self) -> str:
+        """Worst-of: draining only when *every* replica drains (the set still
+        admits while any replica does); degraded when any replica is."""
+        states = [s.health for s in self.replicas]
+        if all(h == DRAINING for h in states):
+            return DRAINING
+        if any(h == DEGRADED for h in states):
+            return DEGRADED
+        return HEALTHY
+
+    @property
+    def accepted(self) -> int:
+        return sum(s.accepted for s in self.replicas)
+
+    @property
+    def rejected(self) -> int:
+        return sum(s.rejected for s in self.replicas)
+
+    @property
+    def served(self) -> int:
+        return sum(s.served for s in self.replicas)
+
+    @property
+    def expired(self) -> int:
+        return sum(s.expired for s in self.replicas)
+
+    # -- request path -------------------------------------------------------
+    def submit(self, node_ids,
+               deadline_s: Optional[float] = None) -> Union[int, Rejection]:
+        """Route to the admitting replica with the shallowest queue (ties to
+        the lowest index — deterministic). Rejected only when every replica
+        is draining or the chosen queue is full."""
+        live = [s for s in self.replicas if s.health != DRAINING]
+        if not live:
+            # count the turn-away on the first replica so aggregate stats
+            # still see it
+            return self.replicas[0]._reject("draining")
+        target = min(live, key=lambda s: s.depth)
+        return target.submit(node_ids, deadline_s=deadline_s)
+
+    def step(self) -> list[Response]:
+        """One microbatch from each replica, starting after the last replica
+        served first (rotating order keeps service fair under load)."""
+        out: list[Response] = []
+        n = len(self.replicas)
+        for k in range(n):
+            out.extend(self.replicas[(self._rr + k) % n].step())
+        self._rr = (self._rr + 1) % n
+        return out
+
+    def drain(self) -> list[Response]:
+        out: list[Response] = []
+        while self.depth:
+            got = self.step()
+            if not got and self.depth:
+                break           # everything left just expired
+            out.extend(got)
+        return out
+
+    # -- the one writer -----------------------------------------------------
+    def refresh(self, changed_ids, rows, **kw):
+        """Refresh through the engine (the single writer); on failure count
+        it and degrade every replica — stale rows keep serving, stamped."""
+        try:
+            rep = self.engine.refresh(changed_ids, rows, **kw)
+        except Exception:
+            self.refresh_failures += 1
+            for s in self.replicas:
+                s.refresh_failures += 1
+                if s.health != DRAINING:
+                    s.health = DEGRADED
+            return None
+        for s in self.replicas:
+            s._recompute_health()
+        return rep
+
+    def mark_partition_down(self, part: int) -> None:
+        self.engine.set_down([part])
+        for s in self.replicas:
+            s._recompute_health()
+
+    def mark_partition_up(self, part: int) -> None:
+        self.engine.set_up([part])
+        for s in self.replicas:
+            s._recompute_health()
+
+    def per_replica(self) -> list[dict]:
+        """Per-replica accounting for reports (the load-balance evidence)."""
+        return [dict(replica=i, health=s.health, accepted=s.accepted,
+                     served=s.served, rejected=s.rejected, expired=s.expired,
+                     depth=s.depth)
+                for i, s in enumerate(self.replicas)]

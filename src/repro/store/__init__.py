@@ -1,0 +1,30 @@
+"""repro.store — sharded embedding store with a hot-node cache and a
+streaming mutation feed (DESIGN.md §13).
+
+The scale-out seam of the serving tier: per-partition shards of every
+served table behind the :class:`~repro.store.backend.StoreBackend` protocol,
+an :class:`~repro.store.cache.LRUCache` hot-node tier with pinned semantics,
+and a :class:`~repro.store.stream.MutationStream` — the seeded, timestamped
+node-feature/edge feed whose batches drive the engine's k-hop delta
+refreshes under the ``max_staleness`` bound.
+
+::
+
+    from repro.store import ShardedEmbeddingStore, MutationStream
+
+    store = ShardedEmbeddingStore(cache_bytes=1 << 20)
+    eng = InferenceEngine(model, pg, params, store=store)   # store-backed reads
+    eng.full_sweep()
+    eng.pin_hot(hot_node_ids)                               # hot tier
+    g, stream = MutationStream.from_workload("gdelt_like@smoke")
+"""
+from __future__ import annotations
+
+from .backend import ShardedEmbeddingStore, StoreBackend, StoreStats  # noqa: F401
+from .cache import LRUCache  # noqa: F401
+from .stream import Mutation, MutationStream, zipf_popularity  # noqa: F401
+
+__all__ = [
+    "StoreBackend", "StoreStats", "ShardedEmbeddingStore", "LRUCache",
+    "Mutation", "MutationStream", "zipf_popularity",
+]

@@ -1,0 +1,366 @@
+"""repro.store: LRU/pinned cache semantics, sharded store accounting,
+mutation stream determinism, store-backed serving equivalence.
+
+Contracts under test:
+  * ``LRUCache``: strict LRU eviction order (recency updated on hit),
+    pinned rows never evicted, byte accounting exact;
+  * ``ShardedEmbeddingStore``: hit/miss/put byte accounting, read-your-writes
+    coherence through interleaved ``put_rows`` (pinned rows write-through
+    refreshed, LRU rows invalidated), ``check_coherence`` catches divergence;
+  * ``MutationStream``: events/batches are pure functions of the seed,
+    last-write-wins within a window, edge events touch both endpoints,
+    registry calibration (``gdelt_like``) round-trips;
+  * store-backed engine: queries bit-exact vs the materialized table after
+    full sweeps and interleaved delta refreshes, even through a cache too
+    small to hold the table; ``StoreReader`` replicas and a ``ReplicaSet``
+    answer consistently under a seeded mixed read/refresh workload;
+  * ``open_loop``: offered schedule is seeded-deterministic, losses and the
+    SLO verdict are reported.
+"""
+import numpy as np
+import pytest
+
+from repro.core.sylvie import SylvieConfig
+from repro.graph import formats, partition, synthetic
+from repro.models.gnn.models import GCN
+from repro.serve import (EmbeddingServer, InferenceEngine, ReplicaSet,
+                         ServeConfig, StoreReader)
+from repro.serve.loadgen import open_loop
+from repro.store import (LRUCache, MutationStream, ShardedEmbeddingStore,
+                         StoreBackend, zipf_popularity)
+from repro.train.trainer import GNNTrainer
+
+
+def _row(d=4, fill=1.0):
+    return np.full(d, fill, dtype=np.float32)
+
+
+# ---------------------------------------------------------------------------
+# LRUCache
+# ---------------------------------------------------------------------------
+def test_lru_evicts_in_recency_order():
+    d = 4
+    cache = LRUCache(capacity_bytes=3 * _row(d).nbytes)
+    for k in "abc":
+        cache.insert(k, _row(d))
+    assert cache.lru_keys() == ("a", "b", "c")
+    # a hit moves "a" to most-recent; "b" becomes the eviction candidate
+    assert cache.lookup("a") is not None
+    cache.insert("d", _row(d))
+    assert "b" not in cache
+    assert cache.lru_keys() == ("c", "a", "d")
+    assert cache.evictions == 1
+    assert cache.evicted_bytes == _row(d).nbytes
+
+
+def test_lru_byte_accounting_and_capacity():
+    d = 8
+    rb = _row(d).nbytes
+    cache = LRUCache(capacity_bytes=2 * rb)
+    cache.insert("a", _row(d))
+    cache.insert("b", _row(d))
+    assert cache.lru_bytes == 2 * rb and cache.bytes_cached == 2 * rb
+    cache.insert("c", _row(d))                 # evicts "a"
+    assert cache.lru_bytes == 2 * rb
+    # a row larger than the whole capacity is never admitted
+    cache.insert("huge", np.zeros(1000, np.float32))
+    assert "huge" not in cache
+    # hits/misses/hit_bytes count through lookup only
+    assert cache.lookup("b") is not None and cache.lookup("zz") is None
+    assert (cache.hits, cache.misses, cache.hit_bytes) == (1, 1, rb)
+
+
+def test_pinned_rows_survive_eviction_pressure():
+    d = 4
+    rb = _row(d).nbytes
+    cache = LRUCache(capacity_bytes=3 * rb)
+    cache.pin("hot", _row(d, 7.0))
+    for i in range(10):                        # churn far past capacity
+        cache.insert(f"cold{i}", _row(d, float(i)))
+    assert cache.is_pinned("hot")
+    np.testing.assert_array_equal(cache.lookup("hot"), _row(d, 7.0))
+    assert cache.pinned_bytes == rb
+    # capacity bounds the LRU tier only; pinned rows don't compete for it
+    assert cache.lru_bytes <= 3 * rb
+    # repin refreshes in place; unpin demotes to absent
+    assert cache.repin("hot", _row(d, 9.0))
+    np.testing.assert_array_equal(cache.lookup("hot"), _row(d, 9.0))
+    cache.unpin("hot")
+    assert "hot" not in cache
+    assert not cache.repin("hot", _row(d))     # no longer pinned
+
+
+# ---------------------------------------------------------------------------
+# ShardedEmbeddingStore
+# ---------------------------------------------------------------------------
+def _store(cache_rows=4, parts=2, rows=6, d=4, seed=0):
+    st = ShardedEmbeddingStore(cache_bytes=cache_rows * d * 4)
+    st.create_table("t", part_rows=(rows,) * parts, d=d)
+    rng = np.random.default_rng(seed)
+    for p in range(parts):
+        st.put_rows("t", p, np.arange(rows),
+                    rng.normal(0, 1, (rows, d)).astype(np.float32))
+    return st
+
+
+def test_store_is_a_store_backend():
+    assert isinstance(_store(), StoreBackend)
+
+
+def test_store_hit_miss_byte_accounting():
+    st = _store(cache_rows=8)
+    d4 = 4 * 4                                  # row bytes
+    s0 = st.stats()
+    assert (s0.hits, s0.misses, s0.miss_bytes) == (0, 0, 0)
+    st.get_rows("t", 0, [0, 1])                 # two cold misses
+    s1 = st.stats()
+    assert (s1.misses, s1.miss_bytes) == (2, 2 * d4)
+    st.get_rows("t", 0, [1, 2])                 # one hit, one miss
+    s2 = st.stats()
+    assert (s2.hits, s2.hit_bytes) == (1, d4)
+    assert (s2.misses, s2.miss_bytes) == (3, 3 * d4)
+    assert s2.gets == 2 and s2.hit_rate == pytest.approx(1 / 4)
+    # puts are counted too, and unknown tables raise
+    assert s2.put_rows == 12 and s2.put_bytes == 12 * d4
+    with pytest.raises(KeyError):
+        st.get_rows("nope", 0, [0])
+    with pytest.raises(ValueError):
+        st.create_table("t", part_rows=(6, 6), d=4)
+
+
+def test_store_reads_coherent_through_interleaved_writes():
+    """Cache-vs-shard equivalence after interleaved refreshes: pinned rows
+    write-through, LRU rows invalidate — reads always match ``peek_rows``."""
+    st = _store(cache_rows=4, rows=8)
+    st.pin("t", 0, [0, 1])
+    rng = np.random.default_rng(3)
+    for it in range(6):
+        slots = rng.choice(8, size=3, replace=False)
+        st.put_rows("t", 0, slots,
+                    rng.normal(0, 1, (3, 4)).astype(np.float32))
+        got = st.get_rows("t", 0, np.arange(8))
+        np.testing.assert_array_equal(got, st.peek_rows("t", 0, np.arange(8)),
+                                      err_msg=f"iteration {it}")
+        assert st.check_coherence() > 0
+    assert st.stats().evictions > 0             # the LRU tail actually churned
+
+
+def test_store_put_rejects_shape_mismatch():
+    st = _store()
+    with pytest.raises(ValueError):
+        st.put_rows("t", 0, [0, 1], np.zeros((2, 5), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# MutationStream
+# ---------------------------------------------------------------------------
+def test_stream_events_deterministic_and_calibrated():
+    s = MutationStream(100, 8, rate=50.0, feat_frac=0.7, skew=1.0, seed=4)
+    a, b = s.events(40), s.events(40)
+    assert len(a) == 40
+    for ea, eb in zip(a, b):
+        assert (ea.t, ea.kind, ea.node, ea.dst) == (eb.t, eb.kind, eb.node,
+                                                    eb.dst)
+        if ea.kind == "feat":
+            np.testing.assert_array_equal(ea.row, eb.row)
+    ts = np.array([e.t for e in a])
+    assert (np.diff(ts) > 0).all()              # strictly increasing clock
+    kinds = {e.kind for e in a}
+    assert kinds <= {"feat", "edge"}
+
+
+def test_stream_batches_last_write_wins_and_edge_touch():
+    s = MutationStream(50, 4, rate=200.0, feat_frac=0.6, seed=1)
+    current = np.zeros((50, 4), np.float32)
+    batches = s.batches(80, window_s=0.1, rows_of=lambda ids: current[ids])
+    assert batches, "80 events at 200/s must fill at least one window"
+    evs = s.events(80)
+    for t_due, ids, rows in batches:
+        assert rows.shape == (ids.size, 4)
+        assert ids.size == np.unique(ids).size
+        window = [e for e in evs if t_due - 0.1 < e.t <= t_due]
+        for j, i in enumerate(ids.tolist()):
+            feat = [e for e in window if e.kind == "feat" and e.node == i]
+            if feat:                            # last write in the window wins
+                np.testing.assert_array_equal(rows[j], feat[-1].row)
+            else:                               # edge-touched at current rows
+                assert any(e.kind == "edge" and i in (e.node, e.dst)
+                           for e in window)
+                np.testing.assert_array_equal(rows[j], current[i])
+
+
+def test_stream_from_workload_calibration():
+    g, s = MutationStream.from_workload("gdelt_like@smoke", seed=2)
+    assert (s.n_nodes, s.d_feat) == (g.n_nodes, g.x.shape[1])
+    assert s.rate == 40.0 and s.skew == pytest.approx(1.1)
+    with pytest.raises(KeyError):
+        MutationStream.from_workload("yelp_like@smoke")   # no stream tiers
+
+
+def test_zipf_popularity_shapes():
+    p = zipf_popularity(100, 1.2, seed=0)
+    assert p.shape == (100,) and p.sum() == pytest.approx(1.0)
+    u = zipf_popularity(100, 0.0, seed=0)
+    np.testing.assert_allclose(u, 1 / 100)
+
+
+# ---------------------------------------------------------------------------
+# store-backed serving (engine + replicas)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def served():
+    """One trained checkpoint served three ways: materialized engine,
+    store-backed engine (roomy cache), store-backed engine (tiny cache)."""
+    g0 = synthetic.planted_partition(n_nodes=240, d_feat=12, seed=0)
+    ei = formats.add_self_loops(g0.edge_index, g0.n_nodes)
+    ew = formats.gcn_edge_weights(ei, g0.n_nodes)
+    g = formats.Graph(g0.n_nodes, ei, g0.x, g0.y, g0.train_mask, g0.val_mask,
+                      g0.test_mask, n_classes=g0.n_classes)
+    pg = partition.partition_graph(g, 4, edge_weight=ew, layout="compact")
+    model = GCN(g.x.shape[1], 16, g.n_classes, n_layers=2)
+    import tempfile
+    with tempfile.TemporaryDirectory() as td:
+        tr = GNNTrainer(model, pg, SylvieConfig(mode="sync", bits=1),
+                        ckpt_dir=td)
+        tr.fit(3)
+        tr.save()
+        eng_m, _ = InferenceEngine.from_checkpoint(
+            td, model, pg, config=ServeConfig(bits=1))
+        eng_big, _ = InferenceEngine.from_checkpoint(
+            td, model, pg, config=ServeConfig(bits=1),
+            store=ShardedEmbeddingStore(cache_bytes=1 << 22))
+        eng_tiny, _ = InferenceEngine.from_checkpoint(
+            td, model, pg, config=ServeConfig(bits=1),
+            store=ShardedEmbeddingStore(cache_bytes=40 * g.n_classes * 4))
+        for e in (eng_m, eng_big, eng_tiny):
+            e.full_sweep()
+        yield g, pg, eng_m, eng_big, eng_tiny
+
+
+def test_store_engine_bitexact_vs_materialized(served):
+    g, pg, eng_m, eng_big, eng_tiny = served
+    ids = np.arange(g.n_nodes)
+    ref = eng_m.query(ids).logits
+    np.testing.assert_array_equal(eng_big.query(ids).logits, ref)
+    # a cache far too small for the table must change *nothing* but traffic
+    np.testing.assert_array_equal(eng_tiny.query(ids).logits, ref)
+    assert eng_tiny.store.stats().miss_bytes > 0
+    assert eng_big.verify_store() > 0
+    assert eng_tiny.verify_store() > 0
+
+
+def test_store_engine_bitexact_through_interleaved_refreshes(served):
+    g, pg, eng_m, eng_big, eng_tiny = served
+    rng = np.random.default_rng(7)
+    all_ids = np.arange(g.n_nodes)
+    for it in range(3):
+        ch = rng.choice(g.n_nodes, size=6, replace=False)
+        rows = rng.normal(0, 1, (6, g.x.shape[1])).astype(np.float32)
+        for e in (eng_m, eng_big, eng_tiny):
+            e.refresh(ch, rows)
+        qids = rng.choice(g.n_nodes, size=40)
+        ref = eng_m.query(qids).logits
+        np.testing.assert_array_equal(eng_big.query(qids).logits, ref,
+                                      err_msg=f"iteration {it}")
+        np.testing.assert_array_equal(eng_tiny.query(qids).logits, ref,
+                                      err_msg=f"iteration {it}")
+        np.testing.assert_array_equal(eng_big.query(all_ids).logits,
+                                      eng_m.query(all_ids).logits)
+    assert eng_big.verify_store() > 0
+
+
+def test_store_reader_is_query_only_replica(served):
+    g, pg, eng_m, eng_big, _ = served
+    rd = eng_big.reader()
+    assert isinstance(rd, StoreReader)
+    ids = np.array([0, 5, 100, g.n_nodes - 1])
+    np.testing.assert_array_equal(rd.query(ids).logits,
+                                  eng_big.query(ids).logits)
+    np.testing.assert_array_equal(rd.embeddings(ids), eng_big.embeddings(ids))
+    assert not hasattr(rd, "refresh")          # readers cannot write
+    # a storeless engine serves itself as its own "reader"
+    assert eng_m.reader() is eng_m
+    with pytest.raises(ValueError):
+        StoreReader(eng_m)
+
+
+def test_replicaset_consistent_under_mixed_workload(served):
+    """Multi-replica answer consistency: N replicas over one store answer a
+    seeded mixed read/refresh workload identically to the materialized
+    engine, with all replicas sharing the load."""
+    g, pg, eng_m, eng_big, _ = served
+    rs = ReplicaSet(eng_big, n_replicas=3, microbatch=32)
+    assert all(isinstance(s.engine, StoreReader) for s in rs.replicas)
+    rng = np.random.default_rng(11)
+    want: dict[int, np.ndarray] = {}
+    got: dict[int, np.ndarray] = {}
+    for round_ in range(8):
+        for _ in range(6):
+            ids = rng.integers(0, g.n_nodes, size=4)
+            rid = rs.submit(ids)
+            assert isinstance(rid, int)
+            want[rid] = ids
+        if round_ % 3 == 2:                     # interleaved refresh (writer)
+            ch = rng.choice(g.n_nodes, size=5, replace=False)
+            rows = rng.normal(0, 1, (5, g.x.shape[1])).astype(np.float32)
+            assert rs.refresh(ch, rows) is not None
+            eng_m.refresh(ch, rows)
+        for resp in rs.drain():
+            got[resp.req_id] = resp.logits
+            # answered from the same (possibly pre-refresh) table state the
+            # materialized engine now holds: refreshes only happen when the
+            # queues are drained, so logits must match the current reference
+            np.testing.assert_array_equal(resp.logits,
+                                          eng_m.query(want[resp.req_id]).logits)
+    assert set(got) == set(want)                # every request answered once
+    per = rs.per_replica()
+    assert sum(r["served"] for r in per) == len(want)
+    assert all(r["accepted"] > 0 for r in per)  # admission actually balanced
+
+
+def test_replicaset_drains_and_routes_around_draining_replica(served):
+    g, pg, eng_m, eng_big, _ = served
+    rs = ReplicaSet(eng_big, n_replicas=2, microbatch=16)
+    rs.replicas[0].start_draining()
+    rids = [rs.submit([i]) for i in range(5)]
+    assert all(isinstance(r, int) for r in rids)
+    assert rs.replicas[1].accepted == 5         # all routed to the live one
+    assert rs.health == "healthy"               # one live replica -> still up
+    rs.replicas[1].start_draining()
+    from repro.serve import Rejection
+    assert isinstance(rs.submit([0]), Rejection)
+    assert rs.health == "draining"
+    assert len(rs.drain()) == 5
+
+
+# ---------------------------------------------------------------------------
+# open-loop load generation
+# ---------------------------------------------------------------------------
+def test_open_loop_reports_slo_and_determinism(served):
+    g, pg, eng_m, eng_big, _ = served
+    srv = EmbeddingServer(eng_big, microbatch=64)
+    rep = open_loop(srv, g.n_nodes, qps=2000.0, requests=60, batch=4,
+                    seed=3, skew=1.1, slo_ms=1000.0)
+    assert rep["completed"] == 60 and rep["lost"] == 0
+    assert rep["slo_pass"] is True and rep["slo_ms"] == 1000.0
+    assert rep["p99_ms"] >= rep["p50_ms"] >= 0.0
+    # the offered schedule is a pure function of the seed
+    r1 = np.random.default_rng(3).exponential(1 / 2000.0, size=60)
+    r2 = np.random.default_rng(3).exponential(1 / 2000.0, size=60)
+    np.testing.assert_array_equal(np.cumsum(r1), np.cumsum(r2))
+    with pytest.raises(ValueError):
+        open_loop(srv, g.n_nodes, qps=0.0)
+
+
+def test_open_loop_feed_drives_refreshes(served):
+    g, pg, eng_m, eng_big, _ = served
+    stream = MutationStream(g.n_nodes, g.x.shape[1], rate=300.0, seed=5)
+    feed = stream.batches(30, 0.05, rows_of=eng_big.feature_rows)
+    srv = EmbeddingServer(eng_big, microbatch=64)
+    rep = open_loop(srv, g.n_nodes, qps=1000.0, requests=40, batch=4,
+                    seed=6, feed=feed)
+    assert rep["refreshes"] == len(feed)
+    assert rep["refresh_failures"] == 0
+    assert rep["refresh_wire_bytes"] > 0
+    assert rep["refresh_lag_max_s"] >= 0.0
+    assert eng_big.verify_store() > 0           # still coherent afterwards

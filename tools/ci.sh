@@ -12,15 +12,24 @@
 #                              if the quantized delta refresh ships more than
 #                              10% of the full 32-bit sweep bytes; bench_chaos
 #                              fails if the armed fault path's epoch overhead
-#                              regresses (all write untracked *.smoke.json;
-#                              only full runs update the tracked BENCH_*.json
-#                              records)
+#                              regresses; bench_store fails if store-backed
+#                              reads diverge, the cache hit rate drops below
+#                              0.9, or open-loop p99 breaks the SLO (all write
+#                              untracked *.smoke.json; only full runs update
+#                              the tracked BENCH_*.json records)
 #   tools/ci.sh --policy       CommPolicy suite with 4 forced host devices
 #                              (runs the shard_map Uniform-parity check
 #                              in-process instead of skipping it)
 #   tools/ci.sh --serve        repro.serve suite with 4 forced host devices
 #                              (runs the shard_map serving-parity + delta
 #                              refresh checks in-process instead of skipping)
+#   tools/ci.sh --store        repro.store suite (sharded embedding store,
+#                              hot-node cache, mutation stream, multi-replica
+#                              serving) with 4 forced host devices, then the
+#                              bench_store smoke gate (bit-exact store-backed
+#                              reads, >= 0.9 cache hit rate on the skewed
+#                              workload, open-loop p99 within SLO under the
+#                              streaming feed)
 #   tools/ci.sh --chaos        fault-tolerance suite with 4 forced host
 #                              devices (seeded injection, staleness recovery,
 #                              kill-and-resume), then the chaos launcher's
@@ -57,6 +66,12 @@ case "${1:-}" in
     XLA_FLAGS="--xla_force_host_platform_device_count=4${XLA_FLAGS:+ $XLA_FLAGS}" \
       exec python -m pytest -x -q tests/test_serve.py -m "not slow" "$@"
     ;;
+  --store)
+    shift
+    XLA_FLAGS="--xla_force_host_platform_device_count=4${XLA_FLAGS:+ $XLA_FLAGS}" \
+      python -m pytest -x -q tests/test_store.py -m "not slow" "$@"
+    exec python -m benchmarks.bench_store --smoke
+    ;;
   --chaos)
     shift
     XLA_FLAGS="--xla_force_host_platform_device_count=4${XLA_FLAGS:+ $XLA_FLAGS}" \
@@ -67,7 +82,8 @@ case "${1:-}" in
     shift
     python -m benchmarks.bench_halo --smoke "$@"
     python -m benchmarks.bench_serve --smoke "$@"
-    exec python -m benchmarks.bench_chaos --smoke "$@"
+    python -m benchmarks.bench_chaos --smoke "$@"
+    exec python -m benchmarks.bench_store --smoke "$@"
     ;;
   --docs)
     shift
