@@ -18,7 +18,12 @@ Covered entry points (acceptance matrix):
   serve single-sweep-executable guarantee from PR 6 (RC207);
 * fault-injection transparency: with ``faults=None`` a FaultyBackend-built
   step traces the *identical* program as the plain backend, and two armed
-  epochs with different fault masks share one jaxpr (RC208).
+  epochs with different fault masks share one jaxpr (RC208);
+* overlap-schedule parity: the ``schedule="overlap"`` step lowers the *same*
+  ppermute-per-bucket census and wire dtypes as blocking — the fence
+  (``optimization_barrier``) reorders, it must never duplicate or widen an
+  exchange — and overlap decisions stay inside the RC204 budget of two
+  executables per lattice decision (RC209).
 
 shard_map contracts need >= 4 devices; with fewer they are *reported as
 skipped*, never silently passed (``python -m repro.analysis`` sets
@@ -357,6 +362,70 @@ def contract_fault_transparency() -> tuple[list[Finding], list[str]]:
     return findings, []
 
 
+def contract_overlap_census() -> tuple[list[Finding], list[str]]:
+    """RC209(a): the overlap schedule is *census-identical* to blocking. The
+    issue/land split reorders work around the collective; it must not add,
+    drop, widen, or re-route a single exchange. So the shard_map sync step
+    traced with ``schedule="overlap"`` must pass the exact
+    :class:`ExchangeExpectation` the blocking step is held to (same bucket
+    multiset, same ring inversion, same wire dtypes, same psum count) — plus
+    at least one ``optimization_barrier`` eqn, the fence that pins the land
+    after the issue."""
+    where = "contract:overlap_census/gcn/compact/shard_map"
+    if not _mesh_ready():
+        return [], [f"{where} (needs {N_PARTS} devices)"]
+    model, pg, opt, state, args = _workload("gcn", "compact")
+    rt = Runtime.sharded(N_PARTS)
+    cfg = SylvieConfig(mode="sync", bits=1, stochastic=False,
+                       schedule="overlap")
+    ts, ta, ev = make_gnn_steps(model, cfg, opt, backend=rt.backend)
+    ts, _, _ = rt.shard_gnn_steps(ts, ta, ev, state, *args[:1])
+    summary = summarize(jax.make_jaxpr(ts)(state, *args))
+    exp = _train_exp(model, state, pg, "compact", bits=1, sync=True)
+    findings = (check_exchange_census(summary, exp, where)
+                + check_wire_dtypes(summary, exp, where)
+                + check_no_callbacks(summary, where))
+    if not summary.count("optimization_barrier"):
+        findings.append(Finding(
+            code="RC209", where=where,
+            message="overlap-schedule step lowers no optimization_barrier — "
+            "without the fence the land is free to fold back into the issue "
+            "and the schedule silently degenerates to blocking"))
+    return findings, []
+
+
+def contract_overlap_budget() -> tuple[list[Finding], list[str]]:
+    """RC209(b): overlap decisions obey the RC204 budget — one executable per
+    (step flavor, decision), so a blocking + an overlap decision trace exactly
+    2 sync + 2 async executables across repeated invocations (the schedule is
+    part of ``EpochDecision.step_key()``; it must not retrace per call)."""
+    where = "contract:overlap_budget/train"
+    model, pg, opt, state, args = _workload("gcn", "compact")
+    rt = Runtime.simulated(N_PARTS)
+    cfg = SylvieConfig(mode="async", bits=1, stochastic=False)
+    n_sites = len(model.comm_dims())
+    decisions = [EpochDecision.uniform(n_sites, bits=1, stochastic=False,
+                                       schedule=s)
+                 for s in ("blocking", "overlap")]
+    budget = 2 * len(decisions)
+    base = len(gnn_step.TRACE_LOG)
+    for d in decisions:
+        ts, ta, ev = make_gnn_steps(model, cfg, opt, backend=rt.backend,
+                                    decision=d)
+        ts, ta, _ = rt.shard_gnn_steps(ts, ta, ev, state, *args[:1])
+        for _ in range(2):        # second call must reuse the executable
+            st2, _ = ts(state, *args)
+            st2, _ = ta(st2, *args)
+    traced = len(gnn_step.TRACE_LOG) - base
+    if traced != budget:
+        return [Finding(
+            code="RC209", where=where,
+            message=f"overlap recompile budget exceeded: blocking + overlap "
+            f"decisions x (sync+async) x 2 invocations must trace exactly "
+            f"{budget} executables, traced {traced}")], []
+    return [], []
+
+
 # ---------------------------------------------------------------------------
 # registry + driver
 # ---------------------------------------------------------------------------
@@ -374,6 +443,8 @@ CONTRACTS: dict[str, Callable[[], tuple[list[Finding], list[str]]]] = {
     "recompile_budget/train": contract_recompile_budget,
     "serve_one_executable": contract_serve_one_executable,
     "fault_transparency": contract_fault_transparency,
+    "overlap_census/gcn/compact/shard_map": contract_overlap_census,
+    "overlap_budget/train": contract_overlap_budget,
 }
 
 

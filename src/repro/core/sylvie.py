@@ -56,6 +56,12 @@ from .exchange import (PlanArrays, exchange_quantized_halo,
 
 Mode = str  # "vanilla" | "sync" | "async"
 
+# Exchange schedules: "blocking" consumes each halo exchange where it is
+# produced; "overlap" (dist/overlap.py) issues the quantized send early and
+# lands it through a backend fence so the collective can run under the
+# layer's local aggregation. Bit-exact under sync/fresh configs.
+SCHEDULES = ("blocking", "overlap")
+
 
 @dataclasses.dataclass(frozen=True)
 class SylvieConfig:
@@ -70,6 +76,9 @@ class SylvieConfig:
     # Each epoch keeps a (1-p) fraction of halo rows, scaled by 1/(1-p);
     # p=0 disables. Used by the Table-2 baseline comparison.
     boundary_sample_p: float = 0.0
+    # Exchange schedule (see SCHEDULES above). An EpochDecision's schedule
+    # overrides this when one is threaded into the step.
+    schedule: str = "blocking"
 
     @property
     def effective_bits(self) -> int:
@@ -242,6 +251,16 @@ class SylvieComm:
             return self.decision.sites[i]
         return SiteDecision.from_config(self.cfg)
 
+    @property
+    def schedule(self) -> str:
+        """Exchange schedule: the decision's choice when one is threaded in,
+        else the config's (both default to ``"blocking"``)."""
+        sched = (self.decision.schedule if self.decision is not None
+                 else self.cfg.schedule)
+        if sched not in SCHEDULES:
+            raise ValueError(f"unknown schedule {sched!r}; known: {SCHEDULES}")
+        return sched
+
     def halo(self, h: jax.Array) -> jax.Array:
         cfg = self.cfg
         i = self._site
@@ -257,12 +276,23 @@ class SylvieComm:
             # repro.faults.comm imports repro.core — a module-level import
             # here would cycle.
             from ..faults import comm as fcomm
+        # Fault-armed sites always run the blocking faulty primitives: the
+        # recovery blend needs the landed exchange immediately (DESIGN §14).
+        overlap = self.schedule == "overlap" and sf is None
+        if overlap:
+            # lazy import for the same reason as faults.comm above.
+            from ..dist import overlap as olap
         if cfg.mode in ("vanilla", "sync"):
             if sf is not None:
                 halo = fcomm.faulty_quantized_halo(
                     h, self.feat_caches[i], sf, self.plan, kf, kb,
                     sd.fwd_bits, sd.bwd_bits, sd.stochastic, cfg.scale_dtype,
                     self.backend, cfg.quant_impl)
+            elif overlap:
+                halo = olap.overlap_quantized_halo(
+                    h, self.plan, kf, kb, sd.fwd_bits, sd.bwd_bits,
+                    sd.stochastic, cfg.scale_dtype, self.backend,
+                    cfg.quant_impl)
             else:
                 halo = quantized_halo(h, self.plan, kf, kb, sd.fwd_bits,
                                       sd.bwd_bits, sd.stochastic,
@@ -285,6 +315,15 @@ class SylvieComm:
             self.new_feat_caches.append(fcomm.faulty_fresh_halo(
                 h, self.feat_caches[i], sf, self.plan, kf, sd.fwd_bits,
                 sd.stochastic, cfg.scale_dtype, self.backend, cfg.quant_impl))
+            return halo
+        if overlap:
+            halo = olap.overlap_stale_halo(
+                h, self.feat_caches[i], self.grad_ins[i], self.gslots[i],
+                self.plan, kb, sd.bwd_bits, sd.stochastic, cfg.scale_dtype,
+                self.backend, cfg.quant_impl)
+            self.new_feat_caches.append(olap.overlap_fresh_halo(
+                h, self.plan, kf, sd.fwd_bits, sd.stochastic,
+                cfg.scale_dtype, self.backend, cfg.quant_impl))
             return halo
         halo = stale_halo(h, self.feat_caches[i], self.grad_ins[i], self.gslots[i],
                           self.plan, kb, sd.bwd_bits, sd.stochastic,

@@ -69,6 +69,9 @@ class HaloBackend(Protocol):
         zero) move together.
       * ``psum(x)``                  — all-reduce across partitions (Alg. 2
         line 16); identity in the simulated stack.
+      * ``fence(tree)``              — land an in-flight exchange: identity on
+        the data, a scheduling barrier in the lowered program (the overlap
+        schedule's in-order consumption point, ``dist/overlap.py``).
       * ``axis_index()``             — traced flat partition index, or ``None``
         when the whole stack is present (simulated).
 
@@ -91,6 +94,8 @@ class HaloBackend(Protocol):
                                    reverse: bool = False) -> QuantizedTensor: ...
 
     def psum(self, x: jax.Array) -> jax.Array: ...
+
+    def fence(self, tree: Any) -> Any: ...
 
     def axis_index(self) -> Optional[jax.Array]: ...
 
@@ -159,6 +164,9 @@ class SimulatedBackend:
 
     def psum(self, x: jax.Array) -> jax.Array:
         return x  # the stacked-axis contraction is already global
+
+    def fence(self, tree: Any) -> Any:
+        return jax.lax.optimization_barrier(tree)
 
     def axis_index(self) -> None:
         return None
@@ -246,6 +254,9 @@ class ShardMapBackend:
 
     def psum(self, x: jax.Array) -> jax.Array:
         return _rep_psum(x, self.axis_names)
+
+    def fence(self, tree: Any) -> Any:
+        return jax.lax.optimization_barrier(tree)
 
     def axis_index(self) -> jax.Array:
         names = self.axis_names

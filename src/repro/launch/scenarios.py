@@ -33,7 +33,8 @@ from ..dist.runtime import Runtime
 from ..faults import FaultPlan
 from ..models.gnn.models import PAPER_ARCHS as ARCHS
 from ..train.trainer import GNNTrainer
-from .mesh import ICI_BW
+from .cells import _gnn_model_flops
+from .mesh import ICI_BW, PEAK_FLOPS_BF16
 
 
 def parse_policy(spec: str):
@@ -112,6 +113,10 @@ class Scenario:
     # None = fault-free). A string, not a FaultPlan, so Scenario stays a
     # flat declarative record.
     fault: Optional[str] = None
+    # exchange schedule for every cell ("blocking" | "overlap"). A scalar,
+    # not an axis: cell ids stay stable, and every report carries the DESIGN
+    # §8/§14 exposed/overlapped comm-time split either way.
+    schedule: str = "blocking"
 
     def cells(self) -> tuple[Cell, ...]:
         """The expanded cross product, in deterministic order."""
@@ -194,7 +199,7 @@ def run_cell(scn: Scenario, cell: Cell, *,
     else:
         raise KeyError(f"unknown runtime {cell.runtime!r}")
     policy = parse_policy(cell.policy)
-    cfg = SylvieConfig(mode=cell.mode)
+    cfg = SylvieConfig(mode=cell.mode, schedule=scn.schedule)
     tr = GNNTrainer(model, pg, cfg, policy=policy, runtime=runtime,
                     seed=scn.seed, fault_plan=parse_fault(scn.fault))
     t0 = time.time()
@@ -202,6 +207,15 @@ def run_cell(scn: Scenario, cell: Cell, *,
     seconds = time.time() - t0
     pb, eb = tr.comm_bytes_per_epoch()
     wb, web = tr.wire_bytes_per_epoch()
+    # DESIGN §8/§14 comm-time split: per-partition analytic FLOPs bound each
+    # site's overlappable window; blocking exposes every comm second
+    # (exposed + overlapped == modeled_tpu_comm_s in both schedules).
+    n_nodes = int(pg.part_of.shape[0])
+    n_edges = int(pg.edge_mask.sum())
+    flops_per_part = _gnn_model_flops(cell.arch, model, n_nodes, n_edges,
+                                      pg.x.shape[-1], True) / scn.parts
+    exposed_s, overlapped_s = tr.modeled_comm_split(
+        flops_per_part, PEAK_FLOPS_BF16, ICI_BW)
     return {
         "scenario": scn.name, "cell": cell.cell_id,
         "arch": cell.arch, "dataset": cell.dataset,
@@ -219,6 +233,9 @@ def run_cell(scn: Scenario, cell: Cell, *,
         "wire_payload_bytes_per_epoch": float(wb),
         "wire_ec_bytes_per_epoch": float(web),
         "modeled_tpu_comm_s": float((pb + eb) / scn.parts / ICI_BW),
+        "schedule": scn.schedule,
+        "modeled_tpu_comm_exposed_s": float(exposed_s),
+        "modeled_tpu_comm_overlapped_s": float(overlapped_s),
         "bits_per_site": [list(b) for b in tr.history[-1].bits_per_site],
         "seconds": seconds,
         # chaos accounting (zeros when scn.fault is None); the invariant
@@ -244,16 +261,20 @@ def resolve(scenario) -> Scenario:
 
 def run_scenario(scenario, *, out_dir: Optional[Path] = None,
                  cache_dir: Optional[Path] = None,
-                 only: Optional[str] = None) -> list[dict]:
+                 only: Optional[str] = None,
+                 schedule: Optional[str] = None) -> list[dict]:
     """Expand + run a scenario; one report JSON per cell + a summary.
 
     ``only`` is a substring filter over cell ids (run a slice of a big
     matrix, e.g. ``only="gat"`` or ``only="amazon_like"``). A filtered run
     rewrites only its own cell reports; ``summary.json`` is rebuilt from
     *all* cell files on disk, so running a matrix slice by slice converges
-    to the full summary instead of clobbering it.
+    to the full summary instead of clobbering it. ``schedule`` overrides the
+    scenario's exchange schedule for every cell (the ``--schedule`` CLI).
     """
     scn = resolve(scenario)
+    if schedule is not None:
+        scn = dataclasses.replace(scn, schedule=schedule)
     cells = [c for c in scn.cells() if only is None or only in c.cell_id]
     if not cells:
         raise ValueError(f"--only {only!r} matched no cell of {scn.name!r}")

@@ -71,7 +71,8 @@ def train_gnn(args) -> None:
         g.edge_attr = B.geometry_edge_attr(g)
     pg = partition.partition_graph(g, args.parts, edge_weight=ew)
     model = arch.make(g.x.shape[1], g.n_classes)
-    cfg = SylvieConfig(mode=args.mode, bits=args.bits)
+    cfg = SylvieConfig(mode=args.mode, bits=args.bits,
+                       schedule=args.schedule or "blocking")
     tr = GNNTrainer(model, pg, cfg, policy=build_policy(args), seed=args.seed,
                     ckpt_dir=args.ckpt_dir)
     if args.resume and tr.resume():
@@ -194,6 +195,12 @@ def main() -> None:
     ap.add_argument("--mode", default="sync",
                     choices=["vanilla", "sync", "async"])
     ap.add_argument("--bits", type=int, default=1)
+    ap.add_argument("--schedule", default=None,
+                    choices=["blocking", "overlap"],
+                    help="halo-exchange schedule: blocking, or the fenced "
+                         "issue/land overlap pipeline (dist/overlap.py; "
+                         "bit-exact under sync). With --scenario, overrides "
+                         "the scenario's schedule for every cell")
     ap.add_argument("--policy", default="uniform",
                     choices=["uniform", "warmup", "bounded_staleness",
                              "adaqp"],
@@ -218,7 +225,7 @@ def main() -> None:
     if args.scenario:
         from .scenarios import run_scenario
         run_scenario(args.scenario, only=args.only,
-                     out_dir=args.scenario_dir)
+                     out_dir=args.scenario_dir, schedule=args.schedule)
         return
     if args.arch is None:
         ap.error("--arch is required (or pass --scenario)")

@@ -115,6 +115,9 @@ class EpochDecision:
       the synchronous step.
     * ``ef_bits`` — EF21-compressed weight-gradient all-reduce bit-width
       (``None`` = full-precision psum, the paper's setting).
+    * ``schedule`` — ``"blocking"`` (each halo consumed as it is produced) or
+      ``"overlap"`` (issue/land double buffering, ``dist/overlap.py``). Part
+      of :meth:`step_key`: the two schedules trace different programs.
 
     Example — Sylvie-S at 1 bit on a 2-site model::
 
@@ -124,27 +127,30 @@ class EpochDecision:
     sites: tuple[SiteDecision, ...]
     sync: bool = False
     ef_bits: Optional[int] = None
+    schedule: str = "blocking"
 
     @staticmethod
     def uniform(n_sites: int, bits: int = 1, *, sync: bool = False,
                 stochastic: bool = True, boundary_sample_p: float = 0.0,
-                ef_bits: Optional[int] = None) -> "EpochDecision":
+                ef_bits: Optional[int] = None,
+                schedule: str = "blocking") -> "EpochDecision":
         site = SiteDecision(fwd_bits=bits, bwd_bits=bits, stochastic=stochastic,
                             boundary_sample_p=boundary_sample_p)
         return EpochDecision(sites=(site,) * n_sites, sync=sync,
-                             ef_bits=ef_bits)
+                             ef_bits=ef_bits, schedule=schedule)
 
     @staticmethod
     def from_config(cfg, n_sites: int, *, sync: bool = False) -> "EpochDecision":
         """The ``SylvieConfig(bits=...)`` shim: every site gets the config's
         one global decision (see :meth:`SiteDecision.from_config`)."""
         return EpochDecision(sites=(SiteDecision.from_config(cfg),) * n_sites,
-                             sync=sync)
+                             sync=sync, schedule=cfg.schedule)
 
     def snapped(self) -> "EpochDecision":
         return EpochDecision(
             sites=tuple(s.snapped() for s in self.sites), sync=bool(self.sync),
-            ef_bits=None if self.ef_bits is None else snap_bits(self.ef_bits))
+            ef_bits=None if self.ef_bits is None else snap_bits(self.ef_bits),
+            schedule=str(self.schedule))
 
     def with_bits(self, bits: int) -> "EpochDecision":
         """Every site forced to ``bits`` both directions (the trainer uses
@@ -152,13 +158,14 @@ class EpochDecision:
         return EpochDecision(
             sites=tuple(dataclasses.replace(s, fwd_bits=bits, bwd_bits=bits)
                         for s in self.sites),
-            sync=self.sync, ef_bits=self.ef_bits)
+            sync=self.sync, ef_bits=self.ef_bits, schedule=self.schedule)
 
     def step_key(self):
         """Cache key for compiled step functions. ``sync`` is excluded — it
         selects *which* step runs, not how either is traced — so an adaptor
-        toggling sync/async costs no extra compilation."""
-        return (self.sites, self.ef_bits)
+        toggling sync/async costs no extra compilation. ``schedule`` is
+        included: blocking and overlap trace different programs."""
+        return (self.sites, self.ef_bits, self.schedule)
 
     def bits_per_site(self) -> tuple[tuple[int, int], ...]:
         """((fwd_bits, bwd_bits), ...) — the EpochMetrics record."""

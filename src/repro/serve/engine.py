@@ -64,13 +64,16 @@ class ServeConfig:
     required for the delta-refresh exactness guarantee; stochastic rounding is
     allowed but makes deltas unbiased rather than exact. ``max_staleness`` is
     the number of consecutive delta refreshes served before the next refresh
-    is forced to a full sweep."""
+    is forced to a full sweep. ``schedule`` picks the exchange schedule of the
+    sweep executable (``"overlap"`` = fenced issue/land, ``dist/overlap.py``;
+    bit-exact to blocking — the serving sweep is always synchronous/fresh)."""
 
     bits: int = 1
     stochastic: bool = False
     max_staleness: int = 8
     scale_dtype: jnp.dtype = jnp.bfloat16
     quant_impl: str = "auto"
+    schedule: str = "blocking"
 
 
 class ServeComm(SylvieComm):
@@ -101,10 +104,7 @@ class ServeComm(SylvieComm):
         buf = gather_boundary(h, self.plan)
         qt = qlib.quantize(buf, sd.fwd_bits, kf, sd.stochastic,
                            cfg.scale_dtype, impl=cfg.quant_impl)
-        fresh = qlib.dequantize(
-            exchange_quantized_halo(qt, self.plan, self.backend),
-            impl=cfg.quant_impl)
-        fresh = jnp.where(self.plan.recv_mask[..., None], fresh, 0)
+        inflight = exchange_quantized_halo(qt, self.plan, self.backend)
         # which received rows are fresh = the senders' affected masks, moved
         # through the same exchange as a uint8 bitmap (never fp32 on the
         # wire: the analysis wire-dtype audit, RC202, holds this path to the
@@ -112,6 +112,13 @@ class ServeComm(SylvieComm):
         aff = exchange_halo(
             self.send_affected[i][..., None].astype(jnp.uint8),
             self.plan, self.backend)
+        if self.schedule == "overlap":
+            # land both issued exchanges through one fence: the collectives
+            # stay standalone ops the scheduler can overlap with the layer's
+            # local aggregation; identity on data (bit-exact to blocking).
+            inflight, aff = self.backend.fence((inflight, aff))
+        fresh = qlib.dequantize(inflight, impl=cfg.quant_impl)
+        fresh = jnp.where(self.plan.recv_mask[..., None], fresh, 0)
         halo = jnp.where(aff > 0, fresh, self.cached_halos[i])
         self.new_feat_caches.append(halo)
         return halo
@@ -175,13 +182,17 @@ class InferenceEngine:
         self.site_dims = tuple(int(d) for d in model.comm_dims())
         self.n_sites = len(self.site_dims)
         if decision is None:
+            # the config owns the schedule for the default decision; an
+            # explicit decision keeps its own (mirrors trainer semantics).
             decision = EpochDecision.uniform(self.n_sites, bits=cfg.bits,
-                                             stochastic=cfg.stochastic)
+                                             stochastic=cfg.stochastic,
+                                             schedule=cfg.schedule)
         self.decision = validate_decision(decision.snapped(), self.n_sites)
         self._scfg = SylvieConfig(mode="sync", bits=cfg.bits,
                                   stochastic=cfg.stochastic,
                                   scale_dtype=cfg.scale_dtype,
-                                  quant_impl=cfg.quant_impl)
+                                  quant_impl=cfg.quant_impl,
+                                  schedule=self.decision.schedule)
         self.block = B.build_block(pg)
         self.key = jax.random.PRNGKey(seed)
 

@@ -19,6 +19,13 @@ steps per lattice-snapped decision so adaptive policies stay within a small
 recompile budget. Omitting the decision falls back to the one global
 ``SylvieConfig`` choice (the Uniform degenerate case).
 
+The decision (or config) also picks the exchange *schedule*: ``"blocking"``
+consumes each halo where it is produced; ``"overlap"`` routes the same sites
+through the issue/land double buffering of ``dist/overlap.py`` (bit-exact
+under sync, the DESIGN §14 staleness contract under async). The schedule is
+part of ``EpochDecision.step_key()``, so each schedule traces its own
+executables within the same per-decision budget.
+
 The steps also *emit telemetry for the policy loop*: ``state.site_stats`` is a
 ``(n_sites, 2)`` array of ``[sum of squared boundary-row ranges, live row
 count]`` per exchange site, psum'd across partitions — the raw material for
@@ -39,7 +46,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core.staleness import HaloState
-from ..core.sylvie import SylvieComm, SylvieConfig
+from ..core.sylvie import SCHEDULES, SylvieComm, SylvieConfig
 from ..dist.backend import as_backend
 from ..models import nn
 from ..policy.base import EpochDecision, validate_decision
@@ -106,6 +113,10 @@ def make_gnn_steps(model, cfg: SylvieConfig, opt: optlib.Optimizer,
     if decision is None:
         decision = EpochDecision.from_config(cfg, n_sites)
     decision = validate_decision(decision, n_sites)
+    for sched in (cfg.schedule, decision.schedule):
+        if sched not in SCHEDULES:
+            raise ValueError(
+                f"unknown schedule {sched!r}; known: {SCHEDULES}")
     sync_cfg = cfg if cfg.mode != "async" else cfg.replace(mode="sync")
     async_cfg = cfg.replace(mode="async")
 

@@ -66,6 +66,8 @@ class EpochMetrics:
     comm_payload_mb: float
     comm_ec_mb: float
     val_acc: Optional[float] = None
+    # exchange schedule actually traced this epoch ("blocking" | "overlap").
+    schedule: str = "blocking"
     # per-site (fwd_bits, bwd_bits) actually used this epoch + the policy
     # that chose them (heterogeneous-bits accounting).
     bits_per_site: tuple = ()
@@ -214,7 +216,10 @@ class GNNTrainer:
             d = d.with_bits(32)
         sync = (bool(d.sync) or self.cfg.mode != "async" or self._needs_sync
                 or self.epoch == 0)
-        return dataclasses.replace(d, sync=sync)
+        # the exchange schedule is an execution-mode choice, not a precision
+        # one: the config owns it (policies cannot flip it mid-run, so one
+        # trainer stays within the per-decision recompile budget).
+        return dataclasses.replace(d, sync=sync, schedule=self.cfg.schedule)
 
     def _steps_for(self, decision: EpochDecision):
         """(train_sync, train_async) compiled for this decision. Cached on
@@ -280,6 +285,25 @@ class GNNTrainer:
         layout actually ships (incl. bucket-alignment / pairwise padding) —
         the layout-efficiency number the compact plan optimizes."""
         return self._bytes_per_epoch(wire_bytes, decision)
+
+    def modeled_comm_split(self, flops_per_part: float, peak_flops: float,
+                           ici_bw: float,
+                           decision: Optional[EpochDecision] = None
+                           ) -> tuple[float, float]:
+        """DESIGN §8/§14: modeled ``(exposed_s, overlapped_s)`` comm split per
+        epoch under this trainer's schedule. ``flops_per_part`` is the model's
+        analytic per-partition FLOPs (``launch.cells._gnn_model_flops`` /
+        n_parts); each site's overlappable compute window is its uniform
+        share of it. Blocking exposes everything; their sum is always the
+        ``modeled_tpu_comm_s`` total."""
+        from ..dist import overlap as olap
+        if decision is None:
+            decision = self._last_decision or self._decide()
+        comm = olap.site_comm_seconds(self.block.plan, self.site_dims,
+                                      decision, ici_bw, self.cfg.scale_dtype)
+        per_site = flops_per_part / peak_flops / max(self.n_sites, 1)
+        return olap.split_comm_time(comm, (per_site,) * self.n_sites,
+                                    decision.schedule)
 
     def _epoch_key(self):
         return jax.random.fold_in(self.key, self.epoch)
@@ -350,6 +374,7 @@ class GNNTrainer:
         m = EpochMetrics(self.epoch, loss, dt,
                          "sync" if decision.sync else "async",
                          pb / 1e6, eb / 1e6,
+                         schedule=decision.schedule,
                          bits_per_site=decision.bits_per_site(),
                          policy=self.policy.name, ef_bits=decision.ef_bits,
                          faults_injected=injected, halos_reused=reused,

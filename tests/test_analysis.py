@@ -268,6 +268,35 @@ def test_serve_one_executable_fires_on_retracing_sweep(monkeypatch):
     assert any(f.code == "RC204" for f in findings)
 
 
+def test_overlap_budget_contract_clean():
+    findings, skipped = contracts.contract_overlap_budget()
+    assert findings == [] and skipped == []
+
+
+def test_overlap_budget_fires_on_uncached_steps(monkeypatch):
+    from repro.dist.runtime import Runtime
+
+    # a runtime that hands back the raw eager steps: every invocation re-runs
+    # the python body, so the TRACE_LOG grows per call instead of per decision
+    monkeypatch.setattr(Runtime, "shard_gnn_steps",
+                        lambda self, ts, ta, ev, *a: (ts, ta, ev))
+    findings, _ = contracts.contract_overlap_budget()
+    assert any(f.code == "RC209" for f in findings)
+
+
+def test_overlap_census_fires_without_fence(monkeypatch):
+    if len(jax.devices()) < 4:
+        pytest.skip("needs 4 devices (XLA_FLAGS="
+                    "--xla_force_host_platform_device_count=4)")
+    from repro.dist import overlap as olap
+
+    # strip the fence: values are unchanged (identity), but the land can fold
+    # back into the issue — exactly what RC209's barrier census must catch
+    monkeypatch.setattr(olap, "fence", lambda backend, tree: tree)
+    findings, _ = contracts.contract_overlap_census()
+    assert any(f.code == "RC209" for f in findings)
+
+
 def test_contract_error_reported_not_swallowed(monkeypatch):
     monkeypatch.setitem(contracts.CONTRACTS, "boom",
                         lambda: (_ for _ in ()).throw(RuntimeError("nope")))
@@ -290,7 +319,8 @@ def test_shard_map_contracts_run_with_devices():
     if len(jax.devices()) < 4:
         pytest.skip("needs 4 devices (tools/ci.sh --analysis lane)")
     for name in ("train_sync/gcn/compact/shard_map",
-                 "serve_sweep/gcn/compact/shard_map"):
+                 "serve_sweep/gcn/compact/shard_map",
+                 "overlap_census/gcn/compact/shard_map"):
         findings, skipped = contracts.run_contracts(only=[name])
         assert findings == [] and skipped == []
 

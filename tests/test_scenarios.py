@@ -10,8 +10,9 @@ REPORT_KEYS = {
     "runtime", "n_parts", "epochs", "seed", "plan_cache_hit", "final_loss",
     "val_acc", "test_acc", "comm_payload_bytes_per_epoch",
     "comm_ec_bytes_per_epoch", "wire_payload_bytes_per_epoch",
-    "wire_ec_bytes_per_epoch", "modeled_tpu_comm_s", "bits_per_site",
-    "seconds",
+    "wire_ec_bytes_per_epoch", "modeled_tpu_comm_s", "schedule",
+    "modeled_tpu_comm_exposed_s", "modeled_tpu_comm_overlapped_s",
+    "bits_per_site", "seconds",
 }
 
 
@@ -46,9 +47,11 @@ def test_unknown_scenario_and_empty_filter():
         S.run_scenario("smoke", only="no_such_cell")
 
 
+@pytest.mark.slow
 def test_run_scenario_writes_reports_and_reuses_plan_cache(tmp_path):
     """End-to-end on a 2x2x2-shaped tiny matrix; the second invocation must
-    hit the partition-plan cache in every cell (the acceptance criterion)."""
+    hit the partition-plan cache in every cell (the acceptance criterion).
+    Trains 16 cells end-to-end (~30s) — slow suite."""
     scn = S.Scenario(
         name="tiny",
         archs=("gcn", "graphsage"),

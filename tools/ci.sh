@@ -8,7 +8,10 @@
 #                              checks in-process instead of skipping them)
 #   tools/ci.sh --bench-smoke  fast benchmark regression checks: bench_halo
 #                              fails if the compact layout's wire-byte
-#                              reduction regresses past 60%; bench_serve fails
+#                              reduction regresses past 60%; bench_overlap
+#                              fails if the overlap schedule stops hiding comm
+#                              (modeled step must beat compute + comm) or
+#                              loses bit-exactness vs blocking; bench_serve fails
 #                              if the quantized delta refresh ships more than
 #                              10% of the full 32-bit sweep bytes; bench_chaos
 #                              fails if the armed fault path's epoch overhead
@@ -17,6 +20,11 @@
 #                              0.9, or open-loop p99 breaks the SLO (all write
 #                              untracked *.smoke.json; only full runs update
 #                              the tracked BENCH_*.json records)
+#   tools/ci.sh --overlap      overlap-schedule parity suite with 4 forced
+#                              host devices (runs the shard_map blocking-vs-
+#                              overlap bit-exactness check in-process instead
+#                              of skipping it; the hypothesis property tests
+#                              ride along when the dev extra is installed)
 #   tools/ci.sh --policy       CommPolicy suite with 4 forced host devices
 #                              (runs the shard_map Uniform-parity check
 #                              in-process instead of skipping it)
@@ -66,6 +74,12 @@ case "${1:-}" in
     XLA_FLAGS="--xla_force_host_platform_device_count=4${XLA_FLAGS:+ $XLA_FLAGS}" \
       exec python -m pytest -x -q tests/test_serve.py -m "not slow" "$@"
     ;;
+  --overlap)
+    shift
+    XLA_FLAGS="--xla_force_host_platform_device_count=4${XLA_FLAGS:+ $XLA_FLAGS}" \
+      exec python -m pytest -x -q tests/test_overlap.py \
+      tests/test_overlap_properties.py -m "not slow" "$@"
+    ;;
   --store)
     shift
     XLA_FLAGS="--xla_force_host_platform_device_count=4${XLA_FLAGS:+ $XLA_FLAGS}" \
@@ -81,6 +95,7 @@ case "${1:-}" in
   --bench-smoke)
     shift
     python -m benchmarks.bench_halo --smoke "$@"
+    python -m benchmarks.bench_overlap --smoke "$@"
     python -m benchmarks.bench_serve --smoke "$@"
     python -m benchmarks.bench_chaos --smoke "$@"
     exec python -m benchmarks.bench_store --smoke "$@"
