@@ -1,0 +1,146 @@
+"""Observability overhead benchmark: tracing must be free when off.
+
+Tracks the PR-10 acceptance gate by writing ``BENCH_obs.json`` at the repo
+root. Two measurements on the smoke-scale training workload:
+
+* **disabled cost** — per-call ns of the three hot instrumentation seams with
+  no tracer armed (``obs.span`` returning the shared null singleton,
+  ``obs.event`` no-op, ``obs.count`` registry bump), times the seam density
+  one traced epoch actually emits (counted by draining a real traced epoch),
+  divided by the measured untraced epoch wall time. **Gate: <= 1%.** In
+  practice the fraction is orders of magnitude below the gate — the gate
+  exists to catch an accidental allocation or clock read sneaking into the
+  null path.
+* **enabled cost** — the same ratio with the tracer armed (informational,
+  not gated: tracing is opt-in per run).
+
+``--smoke`` shrinks the workload so CI can run it in seconds
+(``BENCH_obs.smoke.json``, untracked; only full runs update the tracked
+record).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+
+from repro import obs
+from repro.core.sylvie import SylvieConfig
+from repro.graph import formats, partition, synthetic
+from repro.models.gnn.models import PAPER_ARCHS
+from repro.train.trainer import GNNTrainer
+
+ROOT = Path(__file__).resolve().parents[1]
+ARCH = "gcn"
+OVERHEAD_GATE = 0.01
+
+
+def _per_call_ns(fn, calls: int) -> float:
+    t0 = time.perf_counter()
+    for _ in range(calls):
+        fn()
+    return (time.perf_counter() - t0) / calls * 1e9
+
+
+def _null_span():
+    with obs.span("step"):
+        pass
+
+
+def _live_span():
+    with obs.span("step", {"mode": "sync"}):
+        pass
+
+
+def _build_trainer(n, d_feat, parts):
+    g = synthetic.powerlaw(n_nodes=n, d_feat=d_feat, avg_degree=16, seed=0)
+    ei = formats.add_self_loops(g.edge_index, g.n_nodes)
+    ew = formats.gcn_edge_weights(ei, g.n_nodes)
+    g = formats.Graph(g.n_nodes, ei, g.x, g.y, g.train_mask, g.val_mask,
+                      g.test_mask, n_classes=g.n_classes)
+    pg = partition.partition_graph(g, parts, method="skewed",
+                                   edge_weight=ew, layout="compact")
+    model = PAPER_ARCHS[ARCH](pg.x.shape[-1], pg.n_classes)
+    return GNNTrainer(model, pg, SylvieConfig(mode="sync", bits=1,
+                                              schedule="overlap"), seed=0)
+
+
+def run(smoke: bool = False) -> dict:
+    n, d_feat, parts, epochs, calls = \
+        (1500, 16, 4, 3, 50_000) if smoke else (6000, 32, 4, 5, 500_000)
+    obs.disable()
+
+    # the three disabled seams, per call
+    null_span_ns = _per_call_ns(_null_span, calls)
+    null_event_ns = _per_call_ns(lambda: obs.event("halo.issue"), calls)
+    count_ns = _per_call_ns(lambda: obs.count("bench.calls"), calls)
+
+    # seam density: drain one *traced* epoch and count what it emitted
+    # (spans + instant events; counters ride the same host seams)
+    tr = _build_trainer(n, d_feat, parts)
+    tr.train_epoch()                            # compile + warm
+    obs.enable()
+    t0 = time.perf_counter()
+    tr.train_epoch()
+    traced_epoch_s = time.perf_counter() - t0
+    seams_per_epoch = len(obs.drain())
+    obs.disable()
+
+    t0 = time.perf_counter()
+    for _ in range(epochs):
+        tr.train_epoch()
+    epoch_s = (time.perf_counter() - t0) / epochs
+
+    # the gate: disabled instrumentation cost per epoch vs epoch wall time.
+    # charge every seam at the priciest disabled rate — still tiny.
+    worst_ns = max(null_span_ns, null_event_ns, count_ns)
+    disabled_frac = seams_per_epoch * worst_ns / 1e9 / epoch_s
+    live_span_ns = None
+    enabled_frac = (traced_epoch_s - epoch_s) / epoch_s
+    obs.enable()
+    live_span_ns = _per_call_ns(_live_span, calls)
+    obs.drain()
+    obs.disable()
+
+    rec = dict(
+        config=dict(n_nodes=n, d_feat=d_feat, parts=parts, arch=ARCH,
+                    epochs=epochs, calls=calls, smoke=smoke,
+                    backend=jax.default_backend()),
+        null_span_ns=null_span_ns,
+        null_event_ns=null_event_ns,
+        count_ns=count_ns,
+        live_span_ns=live_span_ns,
+        seams_per_epoch=seams_per_epoch,
+        epoch_wall_s=epoch_s,
+        disabled_overhead_fraction=disabled_frac,
+        enabled_overhead_fraction=enabled_frac,
+        gate=OVERHEAD_GATE,
+    )
+
+    print(f"== bench_obs (P={parts}, n={n}, d={d_feat}) ==")
+    print(f"disabled: span={null_span_ns:7.1f} ns  event={null_event_ns:6.1f}"
+          f" ns  count={count_ns:6.1f} ns   enabled span={live_span_ns:7.1f}"
+          " ns")
+    print(f"{seams_per_epoch} seams/epoch over {epoch_s*1e3:.1f} ms/epoch -> "
+          f"disabled overhead {disabled_frac:.3e} "
+          f"(gate {OVERHEAD_GATE:.0%}), enabled {enabled_frac:+.2%}")
+
+    out = ROOT / ("BENCH_obs.smoke.json" if smoke else "BENCH_obs.json")
+    out.write_text(json.dumps(rec, indent=1, default=float))
+
+    assert disabled_frac <= OVERHEAD_GATE, \
+        (f"disabled-tracer overhead {disabled_frac:.3e} exceeds the "
+         f"{OVERHEAD_GATE:.0%} gate — the null path stopped being free "
+         f"({worst_ns:.0f} ns/seam x {seams_per_epoch} seams/epoch)")
+    print(f"wrote {out}")
+    return rec
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run -> BENCH_obs.smoke.json (untracked)")
+    run(**vars(ap.parse_args()))

@@ -23,7 +23,10 @@ Covered entry points (acceptance matrix):
   ppermute-per-bucket census and wire dtypes as blocking — the fence
   (``optimization_barrier``) reorders, it must never duplicate or widen an
   exchange — and overlap decisions stay inside the RC204 budget of two
-  executables per lattice decision (RC209).
+  executables per lattice decision (RC209);
+* observability transparency: enabling the span tracer (``repro.obs``)
+  traces jaxpr-identical train/serve programs — spans and counters live at
+  the host seams, never in the lowered program (RC210).
 
 shard_map contracts need >= 4 devices; with fewer they are *reported as
 skipped*, never silently passed (``python -m repro.analysis`` sets
@@ -426,6 +429,70 @@ def contract_overlap_budget() -> tuple[list[Finding], list[str]]:
     return [], []
 
 
+def contract_obs_transparency() -> tuple[list[Finding], list[str]]:
+    """RC210: observability must be compiler-invisible. The span tracer and
+    metrics counters live at the host seams (the same trace-time seams as the
+    TRACE_LOG appends); enabling tracing must not add, drop, or reorder a
+    single eqn. Checked by canon-comparing (hex addresses stripped) the
+    jaxprs of the sync + async train steps (``schedule="overlap"``, the one
+    path whose traced bodies *contain* obs.event seams) and the serve sweep,
+    traced with the tracer disabled vs enabled on a FakeClock."""
+    import re
+
+    from .. import obs
+    from ..serve import delta as deltalib, engine as englib
+
+    where = "contract:obs_transparency"
+    model, pg, opt, state, args = _workload("gcn", "compact")
+    rt = Runtime.simulated(N_PARTS)
+    cfg = SylvieConfig(mode="sync", bits=1, stochastic=False,
+                       schedule="overlap")
+    acfg = SylvieConfig(mode="async", bits=1, stochastic=False,
+                        schedule="overlap")
+    key = jax.random.PRNGKey(2)
+
+    def canon(jaxpr):
+        # jaxpr pretty-printing embeds repr()s of custom_vjp thunks with
+        # object addresses; strip them so only structure is compared.
+        return re.sub(r"0x[0-9a-f]+", "0x", str(jaxpr))
+
+    def snapshot() -> dict[str, str]:
+        # fresh step functions + a fresh engine per pass: the steps are
+        # jitted, so reusing them would serve the second trace from the jit
+        # cache without ever re-running the instrumented python bodies
+        ts, _, _ = make_gnn_steps(model, cfg, opt, backend=rt.backend)
+        _, ta, _ = make_gnn_steps(model, acfg, opt, backend=rt.backend)
+        eng = englib.InferenceEngine(
+            model, pg, model.init(jax.random.PRNGKey(0)),
+            config=englib.ServeConfig(bits=1), runtime=rt)
+        masks = deltalib.plan_full(pg, eng.n_sites).device_masks()
+        return {
+            "train_sync": canon(jax.make_jaxpr(ts)(state, *args)),
+            "train_async": canon(jax.make_jaxpr(ta)(state, *args)),
+            "serve_sweep": canon(jax.make_jaxpr(eng._sweep)(
+                eng.params, eng.block, eng.x, eng._halos, masks, key)),
+        }
+
+    was_on = obs.enabled()
+    try:
+        obs.disable()
+        off = snapshot()
+        obs.enable(obs.FakeClock())
+        on = snapshot()
+        obs.drain()               # discard the trace-time events we provoked
+    finally:
+        if was_on:
+            obs.enable()
+        else:
+            obs.disable()
+    return [Finding(
+        code="RC210", where=f"{where}/{k}",
+        message="enabling the span tracer changes the traced program — "
+        "instrumentation is leaking ops into the jaxpr instead of staying "
+        "at the host seams")
+        for k in off if off[k] != on[k]], []
+
+
 # ---------------------------------------------------------------------------
 # registry + driver
 # ---------------------------------------------------------------------------
@@ -445,6 +512,7 @@ CONTRACTS: dict[str, Callable[[], tuple[list[Finding], list[str]]]] = {
     "fault_transparency": contract_fault_transparency,
     "overlap_census/gcn/compact/shard_map": contract_overlap_census,
     "overlap_budget/train": contract_overlap_budget,
+    "obs_transparency": contract_obs_transparency,
 }
 
 

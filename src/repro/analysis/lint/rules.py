@@ -23,12 +23,20 @@ RA106   Host synchronization in traced modules: ``.item()``,
         inside what should be a pure traced hot path.
 RA107   Unused import (F401-lite fallback for environments without ruff).
         ``__init__.py`` re-exports and ``# noqa``-marked lines are exempt.
+RA108   Raw wall-clock reads (``time.time``/``time.perf_counter``/
+        ``time.monotonic`` and their ``_ns`` variants) in *instrumented*
+        modules — timing there must go through ``repro.obs.clock`` (or an
+        injected clock) so FakeClock tests and traced runs see one time
+        source. See :data:`INSTRUMENTED_MODULES`.
 ======  ======================================================================
 
 "Traced modules" (RA101/RA105/RA106) are the files whose function bodies run
 under ``jit``/``shard_map``/``custom_vjp`` — see :data:`TRACED_MODULES`. Host
 orchestration (trainer loop, serve engine host side, benchmarks) is
-deliberately out of scope: ``time.time()`` around a step is fine there.
+deliberately out of scope: ``time.time()`` around a step is fine there —
+*except* in the obs-instrumented modules, where RA108 routes it through the
+injectable obs clock (``time.sleep`` stays allowed: it waits, it doesn't
+measure).
 """
 from __future__ import annotations
 
@@ -51,6 +59,17 @@ TRACED_MODULES = (
     "src/repro/train/optimizer.py",
 )
 
+# Files (repo-relative; prefixes for directories) instrumented through
+# repro.obs — their timing must read the injectable obs clock, never the
+# wall clock directly (RA108). benchmarks/ are exempt: they *measure* the
+# instrumentation, so they need an independent time source.
+INSTRUMENTED_MODULES = (
+    "src/repro/serve/",
+    "src/repro/store/",
+    "src/repro/train/trainer.py",
+    "src/repro/launch/scenarios.py",
+)
+
 # jax attribute calls that are pure metadata — allowed at import time (RA104).
 _IMPORT_TIME_OK = {"ShapeDtypeStruct", "tree_util", "custom_vjp", "custom_jvp",
                    "jit", "vmap", "grad", "value_and_grad", "named_scope"}
@@ -66,14 +85,21 @@ class Module:
 
     @property
     def is_traced(self) -> bool:
-        return any(self.relpath == p or (p.endswith("/") and
-                                         self.relpath.startswith(p))
-                   for p in TRACED_MODULES)
+        return _matches(self.relpath, TRACED_MODULES)
+
+    @property
+    def is_instrumented(self) -> bool:
+        return _matches(self.relpath, INSTRUMENTED_MODULES)
 
     def noqa(self, lineno: int) -> bool:
         if 1 <= lineno <= len(self.lines):
             return "# noqa" in self.lines[lineno - 1]
         return False
+
+
+def _matches(relpath: str, prefixes) -> bool:
+    return any(relpath == p or (p.endswith("/") and relpath.startswith(p))
+               for p in prefixes)
 
 
 RULES: dict[str, Callable[[Module], list[Finding]]] = {}
@@ -411,4 +437,40 @@ def unused_imports(mod: Module) -> list[Finding]:
         out.append(Finding(
             code="RA107", where=mod.relpath, line=lineno,
             message=f"unused import {orig!r}"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RA108 — raw wall-clock reads in obs-instrumented modules
+# ---------------------------------------------------------------------------
+_WALLCLOCK_NAMES = ("time", "perf_counter", "monotonic",
+                    "perf_counter_ns", "monotonic_ns")
+_WALLCLOCK_CALLS = tuple(f"time.{n}" for n in _WALLCLOCK_NAMES)
+
+
+@rule("RA108")
+def raw_wallclock(mod: Module) -> list[Finding]:
+    if not mod.is_instrumented:
+        return []
+    # `from time import perf_counter [as pc]` makes the read a bare-name
+    # call — track the local aliases so the rename doesn't evade the rule
+    aliases: set[str] = set()
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.ImportFrom) and node.module == "time":
+            for a in node.names:
+                if a.name in _WALLCLOCK_NAMES:
+                    aliases.add(a.asname or a.name)
+    out = []
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        chain = _attr_chain(node.func)
+        if (chain in _WALLCLOCK_CALLS or chain in aliases) and \
+                not mod.noqa(node.lineno):
+            out.append(_finding(
+                "RA108", mod, node,
+                f"`{chain}(...)` reads the wall clock directly in an "
+                "obs-instrumented module — use repro.obs.clock() (or an "
+                "injected clock) so FakeClock tests and traces share one "
+                "time source"))
     return out

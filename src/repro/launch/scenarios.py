@@ -22,12 +22,13 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import json
-import time
 from pathlib import Path
 from typing import Optional
 
 from .. import datasets
+from .. import obs
 from .. import policy as P
+from ..obs import export as obs_export
 from ..core.sylvie import SylvieConfig
 from ..dist.runtime import Runtime
 from ..faults import FaultPlan
@@ -172,15 +173,42 @@ def default_out_dir() -> Path:
     return Path(__file__).resolve().parents[3] / "artifacts" / "scenarios"
 
 
+# Cell reports are versioned: v2 = v1 + {schema_version, obs, trace_path}.
+# tests/test_scenarios.py pins the exact key set so keys cannot silently
+# drop (or silently appear untested).
+REPORT_SCHEMA_VERSION = 2
+
+REPORT_KEYS = frozenset({
+    "schema_version", "scenario", "cell", "arch", "dataset", "policy",
+    "policy_spec", "mode", "runtime", "n_parts", "epochs", "seed",
+    "plan_cache_hit", "final_loss", "val_acc", "test_acc",
+    "comm_payload_bytes_per_epoch", "comm_ec_bytes_per_epoch",
+    "wire_payload_bytes_per_epoch", "wire_ec_bytes_per_epoch",
+    "modeled_tpu_comm_s", "schedule", "modeled_tpu_comm_exposed_s",
+    "modeled_tpu_comm_overlapped_s", "bits_per_site", "seconds", "fault",
+    "faults_injected", "halos_reused", "forced_syncs", "stall_s",
+    "obs", "trace_path",
+})
+
+
 def run_cell(scn: Scenario, cell: Cell, *,
              cache_dir: Optional[Path] = None,
-             loaded: Optional[dict] = None) -> dict:
+             loaded: Optional[dict] = None,
+             obs_dir: Optional[Path] = None) -> dict:
     """Train one cell and return its report dict (not yet written).
 
     ``loaded`` memoizes partitioned graphs within one run — cells sharing a
     dataset reuse the first load instead of re-generating and re-hashing the
     graph per cell; their ``plan_cache_hit`` reports that load's disk
     outcome.
+
+    ``obs_dir`` arms span tracing for this cell: the metrics registry is
+    reset, the tracer runs for the whole train/eval, and
+    ``<obs_dir>/<cell_id>.trace.json`` (Perfetto) +
+    ``<cell_id>.metrics.json`` (registry snapshot + modeled-vs-measured
+    join) are written; the report's ``trace_path`` points at the trace. The
+    ``obs`` block (measured wall per epoch vs modeled exposed/overlapped
+    comm) is present in *every* report — the obs clock works untraced too.
     """
     key = (cell.dataset, scn.parts, scn.seed)
     if loaded is None or key not in loaded:
@@ -202,21 +230,44 @@ def run_cell(scn: Scenario, cell: Cell, *,
     cfg = SylvieConfig(mode=cell.mode, schedule=scn.schedule)
     tr = GNNTrainer(model, pg, cfg, policy=policy, runtime=runtime,
                     seed=scn.seed, fault_plan=parse_fault(scn.fault))
-    t0 = time.time()
-    tr.fit(scn.epochs)
-    seconds = time.time() - t0
-    pb, eb = tr.comm_bytes_per_epoch()
-    wb, web = tr.wire_bytes_per_epoch()
-    # DESIGN §8/§14 comm-time split: per-partition analytic FLOPs bound each
-    # site's overlappable window; blocking exposes every comm second
-    # (exposed + overlapped == modeled_tpu_comm_s in both schedules).
-    n_nodes = int(pg.part_of.shape[0])
-    n_edges = int(pg.edge_mask.sum())
-    flops_per_part = _gnn_model_flops(cell.arch, model, n_nodes, n_edges,
-                                      pg.x.shape[-1], True) / scn.parts
-    exposed_s, overlapped_s = tr.modeled_comm_split(
-        flops_per_part, PEAK_FLOPS_BF16, ICI_BW)
+    traced = obs_dir is not None
+    if traced:
+        obs.reset_metrics()
+        obs.enable()
+    try:
+        t0 = obs.clock()
+        tr.fit(scn.epochs)
+        seconds = obs.clock() - t0
+        pb, eb = tr.comm_bytes_per_epoch()
+        wb, web = tr.wire_bytes_per_epoch()
+        # DESIGN §8/§14 comm-time split: per-partition analytic FLOPs bound
+        # each site's overlappable window; blocking exposes every comm second
+        # (exposed + overlapped == modeled_tpu_comm_s in both schedules).
+        n_nodes = int(pg.part_of.shape[0])
+        n_edges = int(pg.edge_mask.sum())
+        flops_per_part = _gnn_model_flops(cell.arch, model, n_nodes, n_edges,
+                                          pg.x.shape[-1], True) / scn.parts
+        exposed_s, overlapped_s = tr.modeled_comm_split(
+            flops_per_part, PEAK_FLOPS_BF16, ICI_BW)
+        val_acc = float(tr.evaluate("val"))
+        test_acc = float(tr.evaluate("test"))
+    finally:
+        events = obs.drain()
+        if traced:
+            obs.disable()
+    mm = obs_export.modeled_vs_measured(
+        [m.wall_s for m in tr.history], exposed_s, overlapped_s)
+    trace_path = None
+    if traced:
+        run_name = f"{scn.name}/{cell.cell_id}"
+        trace_path = str(obs_export.write_trace(
+            Path(obs_dir) / f"{cell.cell_id}.trace.json", events))
+        obs_export.write_metrics(
+            Path(obs_dir) / f"{cell.cell_id}.metrics.json",
+            metrics=obs.snapshot(), run=run_name, merge=mm,
+            trace_path=trace_path)
     return {
+        "schema_version": REPORT_SCHEMA_VERSION,
         "scenario": scn.name, "cell": cell.cell_id,
         "arch": cell.arch, "dataset": cell.dataset,
         "policy": tr.policy.name, "policy_spec": cell.policy,
@@ -224,8 +275,8 @@ def run_cell(scn: Scenario, cell: Cell, *,
         "n_parts": scn.parts, "epochs": scn.epochs, "seed": scn.seed,
         "plan_cache_hit": bool(cache_hit),
         "final_loss": float(tr.history[-1].loss),
-        "val_acc": float(tr.evaluate("val")),
-        "test_acc": float(tr.evaluate("test")),
+        "val_acc": val_acc,
+        "test_acc": test_acc,
         # exact true-wire bytes per epoch (hardware-independent) + what the
         # plan layout actually ships, and the DESIGN §8 modeled TPU comm time.
         "comm_payload_bytes_per_epoch": float(pb),
@@ -246,6 +297,11 @@ def run_cell(scn: Scenario, cell: Cell, *,
         "halos_reused": int(sum(m.halos_reused for m in tr.history)),
         "forced_syncs": int(sum(m.forced_syncs for m in tr.history)),
         "stall_s": float(sum(m.stall_s for m in tr.history)),
+        # measured-vs-modeled join (always present; the per-epoch rows live
+        # in the metrics artifact, the report carries the headline numbers)
+        "obs": {"enabled": traced, "n_epochs": mm["n_epochs"],
+                "mean_wall_s": mm["mean_wall_s"], "drift_s": mm["drift_s"]},
+        "trace_path": trace_path,
     }
 
 
@@ -262,7 +318,9 @@ def resolve(scenario) -> Scenario:
 def run_scenario(scenario, *, out_dir: Optional[Path] = None,
                  cache_dir: Optional[Path] = None,
                  only: Optional[str] = None,
-                 schedule: Optional[str] = None) -> list[dict]:
+                 schedule: Optional[str] = None,
+                 obs_trace: bool = False,
+                 obs_dir: Optional[Path] = None) -> list[dict]:
     """Expand + run a scenario; one report JSON per cell + a summary.
 
     ``only`` is a substring filter over cell ids (run a slice of a big
@@ -271,6 +329,9 @@ def run_scenario(scenario, *, out_dir: Optional[Path] = None,
     *all* cell files on disk, so running a matrix slice by slice converges
     to the full summary instead of clobbering it. ``schedule`` overrides the
     scenario's exchange schedule for every cell (the ``--schedule`` CLI).
+    ``obs_trace`` (the ``--obs`` CLI) arms span tracing per cell and writes
+    ``<obs_dir>/<scenario>/<cell_id>.{trace,metrics}.json`` (default
+    ``artifacts/obs/``) — render with ``python -m repro.obs summarize``.
     """
     scn = resolve(scenario)
     if schedule is not None:
@@ -281,11 +342,16 @@ def run_scenario(scenario, *, out_dir: Optional[Path] = None,
     out = (Path(out_dir) if out_dir is not None else default_out_dir()) \
         / scn.name
     out.mkdir(parents=True, exist_ok=True)
+    obs_out = None
+    if obs_trace:
+        obs_out = (Path(obs_dir) if obs_dir is not None
+                   else obs_export.default_obs_dir()) / scn.name
     reports = []
     loaded: dict = {}
     for i, cell in enumerate(cells):
-        t0 = time.time()
-        rep = run_cell(scn, cell, cache_dir=cache_dir, loaded=loaded)
+        t0 = obs.clock()
+        rep = run_cell(scn, cell, cache_dir=cache_dir, loaded=loaded,
+                       obs_dir=obs_out)
         (out / f"{cell.cell_id}.json").write_text(
             json.dumps(rep, indent=1, default=float))
         reports.append(rep)
@@ -293,7 +359,7 @@ def run_scenario(scenario, *, out_dir: Optional[Path] = None,
               f"test={rep['test_acc']:.3f} "
               f"comm={rep['comm_payload_bytes_per_epoch']/1e6:7.2f}MB/ep "
               f"cache={'hit' if rep['plan_cache_hit'] else 'miss'} "
-              f"{time.time()-t0:5.1f}s")
+              f"{obs.clock()-t0:5.1f}s")
     if only is None:
         # a full run defines the matrix: drop cell files orphaned by a
         # scenario-definition change so the summary never resurrects them

@@ -185,6 +185,13 @@ def main() -> None:
                     help="with --scenario: substring filter over cell ids")
     ap.add_argument("--scenario-dir", default=None,
                     help="with --scenario: report directory override")
+    ap.add_argument("--obs", action="store_true",
+                    help="with --scenario: arm span tracing per cell and "
+                         "write artifacts/obs/<name>/<cell>.{trace,metrics}"
+                         ".json (render: python -m repro.obs summarize)")
+    ap.add_argument("--obs-dir", default=None,
+                    help="with --scenario --obs: obs artifact directory "
+                         "override")
     # GNN
     ap.add_argument("--graph", default="planted",
                     help="named workload ref ('reddit_like@small', see "
@@ -225,7 +232,8 @@ def main() -> None:
     if args.scenario:
         from .scenarios import run_scenario
         run_scenario(args.scenario, only=args.only,
-                     out_dir=args.scenario_dir, schedule=args.schedule)
+                     out_dir=args.scenario_dir, schedule=args.schedule,
+                     obs_trace=args.obs, obs_dir=args.obs_dir)
         return
     if args.arch is None:
         ap.error("--arch is required (or pass --scenario)")

@@ -1,0 +1,59 @@
+"""repro.obs — unified tracing, metrics, and timeline export (DESIGN §15).
+
+Three small pieces, all stdlib-only (no jax, no other repro imports — every
+layer may depend on this one):
+
+* :mod:`.spans` — the zero-overhead-when-disabled span/event tracer with an
+  injectable monotonic clock (arm with :func:`enable`, read time through
+  :func:`clock`);
+* :mod:`.metrics` — the always-on typed counter/gauge/histogram registry,
+  plus the :class:`TraceLog` list shims that superseded the two historical
+  ``TRACE_LOG``s;
+* :mod:`.export` — Chrome/Perfetto ``trace_event`` JSON + flat metrics JSON
+  writers and the modeled-vs-measured drift join, rendered by
+  ``python -m repro.obs summarize|timeline|diff``.
+"""
+from .spans import (  # noqa: F401
+    NULL_SPAN,
+    FakeClock,
+    Tracer,
+    clock,
+    current,
+    disable,
+    drain,
+    enable,
+    enabled,
+    event,
+    span,
+)
+from .metrics import (  # noqa: F401
+    REGISTRY,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    TraceLog,
+    count,
+    counter,
+    gauge,
+    histogram,
+    observe,
+    reset_metrics,
+    snapshot,
+)
+from .export import (  # noqa: F401
+    default_obs_dir,
+    modeled_vs_measured,
+    write_metrics,
+    write_trace,
+)
+
+__all__ = [
+    "NULL_SPAN", "FakeClock", "Tracer",
+    "clock", "current", "disable", "drain", "enable", "enabled", "event",
+    "span",
+    "REGISTRY", "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "TraceLog", "count", "counter", "gauge", "histogram", "observe",
+    "reset_metrics", "snapshot",
+    "default_obs_dir", "modeled_vs_measured", "write_metrics", "write_trace",
+]

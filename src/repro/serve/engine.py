@@ -29,13 +29,13 @@ sweep (the serving analogue of the Bounded Staleness Adaptor — see
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from ..core import quantization as qlib
 from ..core.exchange import exchange_halo, exchange_quantized_halo, \
     gather_boundary
@@ -50,8 +50,9 @@ from . import delta as deltalib
 
 # Trace instrumentation, mirroring train.gnn_step.TRACE_LOG: the sweep body
 # appends once per jit trace. repro.analysis (RC204/RC207) counts entries to
-# verify the single-sweep-executable guarantee instead of trusting it.
-TRACE_LOG: list[str] = []
+# verify the single-sweep-executable guarantee instead of trusting it; the
+# TraceLog shim additionally counts ``retrace.serve`` in the metrics registry.
+TRACE_LOG = obs.TraceLog("serve")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -245,7 +246,7 @@ class InferenceEngine:
     def _run(self, refresh: deltalib.RefreshPlan, *, kind: str, forced: bool,
              changed_ids: Optional[np.ndarray] = None
              ) -> deltalib.RefreshReport:
-        t0 = time.time()
+        t0 = obs.clock()
         key = jax.random.fold_in(self.key, self._refresh_count)
         self._refresh_count += 1
         masks = refresh.device_masks()
@@ -255,8 +256,10 @@ class InferenceEngine:
             # are data — the sweep executable is unchanged.
             up = (~self._down)[:, None].astype(np.float32)
             masks = tuple(m * up for m in masks)
-        logits, layers, halos = self._sweep(self.params, self.block, self.x,
-                                            self._halos, masks, key)
+        with obs.span("sweep", {"kind": kind}):
+            logits, layers, halos = self._sweep(self.params, self.block,
+                                                self.x, self._halos, masks,
+                                                key)
         self._layers = layers
         self._halos = halos
         fresh_logits = np.asarray(jax.device_get(logits))
@@ -279,7 +282,7 @@ class InferenceEngine:
         return deltalib.RefreshReport(
             kind=kind, forced=forced, changed=refresh.changed,
             affected_rows=refresh.affected_rows, payload_bytes=pb,
-            ec_bytes=eb, meta_bytes=mb, seconds=time.time() - t0)
+            ec_bytes=eb, meta_bytes=mb, seconds=obs.clock() - t0)
 
     # ------------------------------------------------------------------
     # public API
@@ -330,17 +333,19 @@ class InferenceEngine:
             self.x.at[self._part_of[ids], self._slot_of[ids]].set(
                 jnp.asarray(rows)))
         never_swept = self._logits_host is None
-        if full or never_swept or \
-                self._since_full >= self.config.max_staleness:
-            rep = self._run(deltalib.plan_full(self.pg, self.n_sites),
-                            kind="full", forced=not full)
-            rep = dataclasses.replace(rep, changed=int(ids.size))
-            self._since_full = 0
+        with obs.span("refresh", {"changed": int(ids.size)}):
+            if full or never_swept or \
+                    self._since_full >= self.config.max_staleness:
+                rep = self._run(deltalib.plan_full(self.pg, self.n_sites),
+                                kind="full", forced=not full)
+                rep = dataclasses.replace(rep, changed=int(ids.size))
+                self._since_full = 0
+                return rep
+            with obs.span("plan"):
+                plan = self._frontier.plan_refresh(ids, self.n_sites)
+            rep = self._run(plan, kind="delta", forced=False, changed_ids=ids)
+            self._since_full += 1
             return rep
-        plan = self._frontier.plan_refresh(ids, self.n_sites)
-        rep = self._run(plan, kind="delta", forced=False, changed_ids=ids)
-        self._since_full += 1
-        return rep
 
     # ------------------------------------------------------------------
     # degraded mode (partition down/up)

@@ -22,10 +22,11 @@ regime.
 from __future__ import annotations
 
 import time
-from typing import Optional
+from typing import Callable, Optional
 
 import numpy as np
 
+from .. import obs
 from .server import EmbeddingServer, Rejection
 
 # retry/backoff shape on admission rejection: exponential with full jitter,
@@ -34,6 +35,16 @@ from .server import EmbeddingServer, Rejection
 # capacity per step() call, not per network round-trip.
 BACKOFF_BASE_S = 1e-4
 BACKOFF_CAP_S = 0.05
+
+
+def _clock_and_sleep(server, clock):
+    """Resolve the loop's time source: an explicit ``clock``, else the
+    server's (both default to ``repro.obs.clock``). A clock that knows how to
+    sleep (``FakeClock.sleep`` advances fake time) also replaces the real
+    ``time.sleep`` — so SLO loops under a fake clock idle without wall waits."""
+    if clock is None:
+        clock = getattr(server, "clock", None) or obs.clock
+    return clock, getattr(clock, "sleep", time.sleep)
 
 
 def percentiles_ms(latencies_s) -> dict:
@@ -47,8 +58,8 @@ def percentiles_ms(latencies_s) -> dict:
 
 def closed_loop(server: EmbeddingServer, n_nodes: int, *, clients: int = 8,
                 batch: int = 16, requests: int = 200, seed: int = 0,
-                refresh_every: Optional[int] = None,
-                refresh_nodes: int = 0) -> dict:
+                refresh_every: Optional[int] = None, refresh_nodes: int = 0,
+                clock: Optional[Callable[[], float]] = None) -> dict:
     """Drive ``server`` with ``clients`` closed-loop clients until
     ``requests`` responses complete; return the load report dict.
 
@@ -68,7 +79,8 @@ def closed_loop(server: EmbeddingServer, n_nodes: int, *, clients: int = 8,
     reject_reasons: dict[str, int] = {}
     d_feat = server.engine.pg.x.shape[-1]
     next_refresh = refresh_every if refresh_every else None
-    t0 = time.perf_counter()
+    clock, sleep = _clock_and_sleep(server, clock)
+    t0 = clock()
     while completed < requests:
         while outstanding < clients and issued < requests:
             ids = rng.integers(0, n_nodes, size=batch)
@@ -84,7 +96,7 @@ def closed_loop(server: EmbeddingServer, n_nodes: int, *, clients: int = 8,
                             min(r.retry_after_hint, BACKOFF_CAP_S))
                 attempts += 1
                 backoff_s += delay
-                time.sleep(delay)
+                sleep(delay)
                 break       # let step() drain before re-offering load
             attempts = 0
             issued += 1
@@ -116,7 +128,7 @@ def closed_loop(server: EmbeddingServer, n_nodes: int, *, clients: int = 8,
             # iteration would refresh, drowning the configured cadence
             while next_refresh <= completed:
                 next_refresh += refresh_every
-    seconds = time.perf_counter() - t0
+    seconds = clock() - t0
     report = dict(requests=int(completed), clients=int(clients),
                   batch=int(batch), seed=int(seed), seconds=float(seconds),
                   qps=float(completed / max(seconds, 1e-9)),
@@ -135,7 +147,8 @@ def open_loop(server: EmbeddingServer, n_nodes: int, *, qps: float,
               requests: int = 500, batch: int = 16, seed: int = 0,
               skew: float = 0.0, slo_ms: Optional[float] = None,
               deadline_s: Optional[float] = None,
-              feed: Optional[list] = None) -> dict:
+              feed: Optional[list] = None,
+              clock: Optional[Callable[[], float]] = None) -> dict:
     """Sustained open-loop load: seeded Poisson arrivals at a *fixed* offered
     rate, independent of service completions — the SLO-measurement regime
     (a closed loop can never overrun the server, an open loop can and should).
@@ -181,9 +194,10 @@ def open_loop(server: EmbeddingServer, n_nodes: int, *, qps: float,
     refresh_bytes = 0
     refresh_lags: list[float] = []
     i = j = 0               # next arrival / next feed batch
-    t0 = time.perf_counter()
+    clock, sleep = _clock_and_sleep(server, clock)
+    t0 = clock()
     while True:
-        now = time.perf_counter() - t0
+        now = clock() - t0
         # mutation feed: apply at most ONE due batch per iteration — a
         # refresh stalls the request path, so consecutive due batches are
         # interleaved with serving steps instead of stacking into one long
@@ -197,7 +211,7 @@ def open_loop(server: EmbeddingServer, n_nodes: int, *, qps: float,
                 continue
             refreshes += 1
             refresh_bytes += rep.wire_bytes
-            refresh_lags.append((time.perf_counter() - t0) - t_due)
+            refresh_lags.append((clock() - t0) - t_due)
             if rep.kind == "full" and rep.forced:
                 escalations += 1
         # offered load: submit every arrival the clock has passed
@@ -210,7 +224,7 @@ def open_loop(server: EmbeddingServer, n_nodes: int, *, qps: float,
                 arrival_of[r] = float(arrivals[i])
             i += 1
         served = server.step()
-        t_done = time.perf_counter() - t0
+        t_done = clock() - t0
         for resp in served:
             latencies.append(t_done - arrival_of.pop(resp.req_id))
             completed += 1
@@ -222,10 +236,10 @@ def open_loop(server: EmbeddingServer, n_nodes: int, *, qps: float,
             if j < len(feed):
                 upcoming.append(feed[j][0])
             if upcoming:
-                wait = min(upcoming) - (time.perf_counter() - t0)
+                wait = min(upcoming) - (clock() - t0)
                 if wait > 0:
-                    time.sleep(wait)
-    seconds = time.perf_counter() - t0
+                    sleep(wait)
+    seconds = clock() - t0
     expired = len(arrival_of)       # submitted but never answered (deadline)
     stats = percentiles_ms(latencies)
     slo_pass = None

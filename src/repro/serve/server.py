@@ -27,11 +27,12 @@ the latency distribution reproducible enough to regression-track in
 from __future__ import annotations
 
 import dataclasses
-import time
 from collections import deque
 from typing import Callable, Optional, Union
 
 import numpy as np
+
+from .. import obs
 
 # health states
 HEALTHY = "healthy"
@@ -104,7 +105,9 @@ class EmbeddingServer:
         self.engine = engine
         self.microbatch = microbatch
         self.max_queue = max_queue
-        self.clock = clock if clock is not None else time.perf_counter
+        # default to the obs clock: perf_counter normally, the injected
+        # deterministic clock when a FakeClock-armed tracer is active
+        self.clock = clock if clock is not None else obs.clock
         self._queue: deque[Request] = deque()
         # replicas in a ReplicaSet interleave id spaces (start=i, stride=N)
         # so request ids stay globally unique across the set
@@ -125,6 +128,7 @@ class EmbeddingServer:
 
     def _reject(self, reason: str) -> Rejection:
         self.rejected += 1
+        obs.count(f"serve.rejected.{reason}")
         return Rejection(reason=reason, depth=len(self._queue),
                          retry_after_hint=self._ema_step_s)
 
@@ -143,17 +147,18 @@ class EmbeddingServer:
             raise ValueError(
                 f"request size must be in [1, microbatch={self.microbatch}], "
                 f"got {ids.size}")
-        if self.health == DRAINING:
-            return self._reject("draining")
-        if len(self._queue) >= self.max_queue:
-            return self._reject("queue_full")
-        rid = self._next_id
-        self._next_id += self._id_stride
-        now = self.clock()
-        deadline = None if deadline_s is None else now + float(deadline_s)
-        self._queue.append(Request(rid, ids, now, deadline))
-        self.accepted += 1
-        return rid
+        with obs.span("admit", {"n": int(ids.size)}):
+            if self.health == DRAINING:
+                return self._reject("draining")
+            if len(self._queue) >= self.max_queue:
+                return self._reject("queue_full")
+            rid = self._next_id
+            self._next_id += self._id_stride
+            now = self.clock()
+            deadline = None if deadline_s is None else now + float(deadline_s)
+            self._queue.append(Request(rid, ids, now, deadline))
+            self.accepted += 1
+            return rid
 
     def _expire(self, now: float) -> None:
         """Drop every queued request whose deadline has already passed —
@@ -181,7 +186,10 @@ class EmbeddingServer:
         if not batch:
             return []
         flat = np.concatenate([r.node_ids for r in batch])
-        res = self.engine.query(flat)
+        with obs.span("request", {"requests": len(batch),
+                                  "nodes": int(total)}):
+            with obs.span("lookup"):
+                res = self.engine.query(flat)
         logits = res.logits
         stamps = getattr(res, "staleness", None)
         now = self.clock()
@@ -278,6 +286,8 @@ class ReplicaSet:
         if n_replicas < 1:
             raise ValueError("n_replicas must be >= 1")
         self.engine = engine
+        # the set's clock is the replicas' clock (loadgen reads server.clock)
+        self.clock = clock if clock is not None else obs.clock
         reader = getattr(engine, "reader", None)
         self.replicas = [
             EmbeddingServer(reader() if reader is not None else engine,

@@ -28,6 +28,7 @@ from typing import Protocol, Sequence, runtime_checkable
 
 import numpy as np
 
+from .. import obs
 from .cache import LRUCache
 
 
@@ -143,9 +144,11 @@ class ShardedEmbeddingStore:
                 miss_j.append(j)
             else:
                 out[j] = row
+        obs.count("store.hits", slots.size - len(miss_j))
         if miss_j:
             fetched = shard[slots[miss_j]]
             self._miss_bytes += fetched.nbytes
+            obs.count("store.miss_bytes", fetched.nbytes)
             out[miss_j] = fetched
             for j in miss_j:
                 self.cache.insert((table, part, int(slots[j])),

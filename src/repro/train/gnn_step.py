@@ -49,14 +49,16 @@ from ..core.staleness import HaloState
 from ..core.sylvie import SCHEDULES, SylvieComm, SylvieConfig
 from ..dist.backend import as_backend
 from ..models import nn
+from ..obs import TraceLog
 from ..policy.base import EpochDecision, validate_decision
 from . import optimizer as optlib
 from .compression import EFState, ef_allreduce
 
 # Trace instrumentation: step bodies append ("sync" | "async") here at trace
 # time (the python body only runs when jit traces). tests/test_policy.py uses
-# it to assert the recompile budget of adaptive policies.
-TRACE_LOG: list[str] = []
+# it to assert the recompile budget of adaptive policies; the TraceLog shim
+# additionally counts ``retrace.train`` in the obs metrics registry.
+TRACE_LOG = TraceLog("train")
 
 
 @jax.tree_util.register_dataclass

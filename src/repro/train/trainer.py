@@ -29,7 +29,6 @@ Staleness Adaptor (§3.3) is ``policy=BoundedStaleness(eps_s)``; the old
 from __future__ import annotations
 
 import dataclasses
-import time
 import warnings
 from typing import Optional
 
@@ -37,6 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from ..core.exchange import exchange_bytes, wire_bytes
 from ..core.sylvie import SylvieConfig
 from ..dist.runtime import Runtime
@@ -82,6 +82,11 @@ class EpochMetrics:
     halos_reused: int = 0
     forced_syncs: int = 0
     stall_s: float = 0.0
+    # measured whole-epoch wall time on the obs clock (decide + fault arming
+    # + step + telemetry absorption), vs ``seconds`` = the step call alone.
+    # Deterministic under an injected FakeClock; feeds the modeled-vs-measured
+    # join in repro.obs.export.
+    wall_s: float = 0.0
 
 
 class GNNTrainer:
@@ -346,39 +351,49 @@ class GNNTrainer:
         return decision, injected, reused, forced, stall, escalate
 
     def train_epoch(self) -> EpochMetrics:
-        decision = self._decide()
-        injected = reused = forced = 0
-        stall = 0.0
-        escalate = False
-        if self.fault_plan is not None:
-            (decision, injected, reused, forced, stall,
-             escalate) = self._arm_faults(decision)
-        ts, ta = self._steps_for(decision)
-        fn = ts if decision.sync else ta
-        t0 = time.time()
-        self.state, loss = fn(self.state, self.block, self.x, self.y,
-                              self.train_mask, self._epoch_key())
-        loss = float(loss)
-        dt = time.time() - t0
-        self._needs_sync = False
-        if escalate:
-            # staleness-as-recovery escalation: some site has been faulted
-            # for >= escalate_after consecutive epochs; the next epoch is a
-            # forced full-precision synchronous retry (BoundedStaleness also
-            # sees the counters via Telemetry.site_staleness).
-            self._needs_sync = True
-            self._force_recovery = True
-        self._last_decision = decision
-        self._absorb_site_stats()
-        pb, eb = self.comm_bytes_per_epoch(decision)
-        m = EpochMetrics(self.epoch, loss, dt,
-                         "sync" if decision.sync else "async",
-                         pb / 1e6, eb / 1e6,
-                         schedule=decision.schedule,
-                         bits_per_site=decision.bits_per_site(),
-                         policy=self.policy.name, ef_bits=decision.ef_bits,
-                         faults_injected=injected, halos_reused=reused,
-                         forced_syncs=forced, stall_s=stall)
+        w0 = obs.clock()
+        with obs.span("epoch", {"epoch": self.epoch}):
+            with obs.span("decide"):
+                decision = self._decide()
+            injected = reused = forced = 0
+            stall = 0.0
+            escalate = False
+            if self.fault_plan is not None:
+                (decision, injected, reused, forced, stall,
+                 escalate) = self._arm_faults(decision)
+                obs.count("faults.injected", injected)
+                obs.count("faults.halos_reused", reused)
+                obs.count("faults.forced_syncs", forced)
+            ts, ta = self._steps_for(decision)
+            fn = ts if decision.sync else ta
+            t0 = obs.clock()
+            with obs.span("step",
+                          {"mode": "sync" if decision.sync else "async"}):
+                self.state, loss = fn(self.state, self.block, self.x, self.y,
+                                      self.train_mask, self._epoch_key())
+                loss = float(loss)
+            dt = obs.clock() - t0
+            self._needs_sync = False
+            if escalate:
+                # staleness-as-recovery escalation: some site has been faulted
+                # for >= escalate_after consecutive epochs; the next epoch is a
+                # forced full-precision synchronous retry (BoundedStaleness
+                # also sees the counters via Telemetry.site_staleness).
+                self._needs_sync = True
+                self._force_recovery = True
+            self._last_decision = decision
+            self._absorb_site_stats()
+            pb, eb = self.comm_bytes_per_epoch(decision)
+            m = EpochMetrics(self.epoch, loss, dt,
+                             "sync" if decision.sync else "async",
+                             pb / 1e6, eb / 1e6,
+                             schedule=decision.schedule,
+                             bits_per_site=decision.bits_per_site(),
+                             policy=self.policy.name,
+                             ef_bits=decision.ef_bits,
+                             faults_injected=injected, halos_reused=reused,
+                             forced_syncs=forced, stall_s=stall)
+        m.wall_s = obs.clock() - w0
         self.history.append(m)
         self.epoch += 1
         return m

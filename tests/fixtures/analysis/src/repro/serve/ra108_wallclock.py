@@ -1,0 +1,15 @@
+"""Planted RA108: a raw wall-clock read inside an obs-instrumented module.
+
+serve/ threads every timestamp through ``repro.obs.clock()`` (or an injected
+clock) so FakeClock tests and span traces share one time source; a direct
+``time.perf_counter()`` forks the timeline. Exactly one offending call —
+``time.sleep`` below stays legal (it waits, it doesn't measure).
+"""
+import time
+
+
+def measure_step(server):
+    time.sleep(0.0)
+    t0 = time.perf_counter()          # RA108: bypasses the injected clock
+    server.step()
+    return t0

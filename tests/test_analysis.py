@@ -42,30 +42,68 @@ CLI_ENV = {**os.environ,
 
 
 def _fixture(code: str) -> str:
-    stem = {"RA101": "ra101_traced_branch", "RA102": "ra102_unhashable_static",
-            "RA103": "ra103_vjp_arity", "RA104": "ra104_import_time",
-            "RA105": "ra105_nondeterminism", "RA106": "ra106_host_sync",
-            "RA107": "ra107_unused_import"}[code]
-    return os.path.join(FIXTURES, "src", "repro", "core", f"{stem}.py")
+    # RA101-107 fire in traced modules (core/); RA108 fires in
+    # obs-instrumented modules (serve/) — each fixture lives where its rule
+    # is scoped so it trips exactly one rule.
+    rel = {"RA101": "core/ra101_traced_branch",
+           "RA102": "core/ra102_unhashable_static",
+           "RA103": "core/ra103_vjp_arity",
+           "RA104": "core/ra104_import_time",
+           "RA105": "core/ra105_nondeterminism",
+           "RA106": "core/ra106_host_sync",
+           "RA107": "core/ra107_unused_import",
+           "RA108": "serve/ra108_wallclock"}[code]
+    return os.path.join(FIXTURES, "src", "repro", *rel.split("/")) + ".py"
 
 
 # ---------------------------------------------------------------------------
 # AST lint: planted fixtures + clean repo
 # ---------------------------------------------------------------------------
-@pytest.mark.parametrize("code", ["RA101", "RA102", "RA103", "RA104",
-                                  "RA105", "RA106", "RA107"])
+ALL_LINT_CODES = ["RA101", "RA102", "RA103", "RA104", "RA105", "RA106",
+                  "RA107", "RA108"]
+
+
+@pytest.mark.parametrize("code", ALL_LINT_CODES)
 def test_planted_lint_fixture_fires(code):
     findings = run_lint([_fixture(code)], root=FIXTURES)
     assert any(f.code == code for f in findings), \
         f"{code} did not fire on its planted fixture"
 
 
-@pytest.mark.parametrize("code", ["RA101", "RA102", "RA103", "RA104",
-                                  "RA105", "RA106", "RA107"])
+@pytest.mark.parametrize("code", ALL_LINT_CODES)
 def test_planted_lint_fixture_fires_exactly_one_rule(code):
     findings = run_lint([_fixture(code)], root=FIXTURES)
     assert {f.code for f in findings} == {code}, \
         f"fixture for {code} trips other rules too: {findings}"
+
+
+def test_ra108_fires_exactly_once():
+    # the ISSUE-level guarantee: one offending read, one finding — sleep and
+    # the module-level import don't count
+    findings = run_lint([_fixture("RA108")], root=FIXTURES)
+    assert [f.code for f in findings] == ["RA108"]
+
+
+def test_ra108_scoped_to_instrumented_paths(tmp_path):
+    # the same wall-clock read outside INSTRUMENTED_MODULES must stay silent
+    src = open(_fixture("RA108")).read()
+    elsewhere = tmp_path / "src" / "repro" / "launch"
+    elsewhere.mkdir(parents=True)
+    (elsewhere / "wallclock.py").write_text(src)
+    findings = run_lint([str(elsewhere / "wallclock.py")],
+                        root=str(tmp_path), only=["RA108"])
+    assert findings == []
+
+
+def test_ra108_catches_aliased_import(tmp_path):
+    # `from time import perf_counter as pc` must not smuggle the read past
+    # the attribute-chain check
+    mod = tmp_path / "src" / "repro" / "store" / "timing.py"
+    mod.parent.mkdir(parents=True)
+    mod.write_text("from time import perf_counter as pc\n\n\n"
+                   "def read():\n    return pc()\n")
+    findings = run_lint([str(mod)], root=str(tmp_path), only=["RA108"])
+    assert [f.code for f in findings] == ["RA108"]
 
 
 def test_traced_module_rules_scoped_to_traced_paths(tmp_path):
@@ -297,6 +335,30 @@ def test_overlap_census_fires_without_fence(monkeypatch):
     assert any(f.code == "RC209" for f in findings)
 
 
+def test_obs_transparency_contract_clean():
+    findings, skipped = contracts.contract_obs_transparency()
+    assert findings == [] and skipped == []
+
+
+def test_obs_transparency_fires_on_leaky_instrumentation(monkeypatch):
+    from repro import obs
+    from repro.train import gnn_step
+
+    class LeakyLog(obs.TraceLog):
+        # the planted violation: instrumentation that emits a *traced op*
+        # (a debug callback) when the tracer is armed — exactly what RC210
+        # exists to catch at the TRACE_LOG seam
+        def append(self, tag):
+            super().append(tag)
+            if obs.enabled():
+                jax.debug.print("retraced {}", 0)
+
+    monkeypatch.setattr(gnn_step, "TRACE_LOG", LeakyLog("train"))
+    findings, _ = contracts.contract_obs_transparency()
+    assert any(f.code == "RC210" for f in findings)
+    assert all("train" in f.where for f in findings if f.code == "RC210")
+
+
 def test_contract_error_reported_not_swallowed(monkeypatch):
     monkeypatch.setitem(contracts.CONTRACTS, "boom",
                         lambda: (_ for _ in ()).throw(RuntimeError("nope")))
@@ -370,10 +432,9 @@ def _cli(*args):
 
 def test_cli_exits_nonzero_on_planted_fixture():
     r = _cli("--lint-only", "--root", FIXTURES,
-             os.path.join(FIXTURES, "src", "repro", "core"))
+             os.path.join(FIXTURES, "src", "repro"))
     assert r.returncode == 1, r.stdout + r.stderr
-    for code in ("RA101", "RA102", "RA103", "RA104", "RA105", "RA106",
-                 "RA107"):
+    for code in ALL_LINT_CODES:
         assert code in r.stdout
 
 

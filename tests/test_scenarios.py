@@ -1,19 +1,29 @@
-"""Scenario-matrix runner: expansion, reports, plan-cache reuse."""
+"""Scenario-matrix runner: expansion, reports, schema, plan-cache reuse."""
 import json
 
 import pytest
 
 from repro.launch import scenarios as S
 
-REPORT_KEYS = {
+# The v1 report keys, pinned independently of the source: v2 must stay a
+# strict superset (schema versioning means old consumers keep working).
+V1_REPORT_KEYS = {
     "scenario", "cell", "arch", "dataset", "policy", "policy_spec", "mode",
     "runtime", "n_parts", "epochs", "seed", "plan_cache_hit", "final_loss",
     "val_acc", "test_acc", "comm_payload_bytes_per_epoch",
     "comm_ec_bytes_per_epoch", "wire_payload_bytes_per_epoch",
     "wire_ec_bytes_per_epoch", "modeled_tpu_comm_s", "schedule",
     "modeled_tpu_comm_exposed_s", "modeled_tpu_comm_overlapped_s",
-    "bits_per_site", "seconds",
+    "bits_per_site", "seconds", "fault", "faults_injected", "halos_reused",
+    "forced_syncs", "stall_s",
 }
+
+
+def test_report_schema_is_versioned_superset():
+    assert S.REPORT_SCHEMA_VERSION == 2
+    assert V1_REPORT_KEYS < S.REPORT_KEYS
+    assert S.REPORT_KEYS - V1_REPORT_KEYS == \
+        {"schema_version", "obs", "trace_path"}
 
 
 def test_smoke_scenario_matrix_shape():
@@ -69,7 +79,12 @@ def test_run_scenario_writes_reports_and_reuses_plan_cache(tmp_path):
     for rep in reports:
         on_disk = json.loads((out / "tiny" / f"{rep['cell']}.json")
                              .read_text())
-        assert REPORT_KEYS <= set(on_disk)
+        # the exact pinned key set: keys cannot silently drop OR appear
+        assert set(on_disk) == S.REPORT_KEYS
+        assert on_disk["schema_version"] == S.REPORT_SCHEMA_VERSION
+        assert on_disk["obs"]["enabled"] is False
+        assert on_disk["obs"]["n_epochs"] == 1
+        assert on_disk["trace_path"] is None
         assert on_disk["epochs"] == 1 and on_disk["n_parts"] == 2
         assert on_disk["comm_payload_bytes_per_epoch"] > 0
         assert on_disk["modeled_tpu_comm_s"] > 0
@@ -113,3 +128,38 @@ def test_only_filter_selects_a_slice_and_summary_merges(tmp_path):
                          .read_text())
     assert summary["n_cells"] == 1
     assert {c["arch"] for c in summary["cells"]} == {"gcn"}
+
+
+def test_traced_cell_writes_obs_artifacts_with_full_schema(tmp_path):
+    """One traced cell end-to-end: the report carries the exact v2 key set
+    with a populated obs block, and the obs artifacts are a valid Perfetto
+    trace + a summarizable metrics file (the --obs acceptance path)."""
+    from repro.obs import export as ox
+
+    scn = S.Scenario(name="one", archs=("gcn",),
+                     datasets=("mesh_like@smoke",),
+                     policies=("uniform:1",), parts=2, epochs=2)
+    [cell] = scn.cells()
+    obs_dir = tmp_path / "obs" / "one"
+    rep = S.run_cell(scn, cell, cache_dir=tmp_path / "p", obs_dir=obs_dir)
+    assert set(rep) == S.REPORT_KEYS
+    assert rep["schema_version"] == S.REPORT_SCHEMA_VERSION
+    assert rep["obs"]["enabled"] is True
+    assert rep["obs"]["n_epochs"] == 2 and rep["obs"]["mean_wall_s"] > 0.0
+    # drift = measured wall - modeled exposed comm; CPU wall time dwarfs the
+    # modeled TPU wire time, so the drift is large and positive by design
+    assert rep["obs"]["drift_s"] > 0.0
+    trace = obs_dir / f"{cell.cell_id}.trace.json"
+    metrics = obs_dir / f"{cell.cell_id}.metrics.json"
+    assert rep["trace_path"] == str(trace)
+    names = {e["name"] for e in ox.load_trace(trace)}
+    assert {"epoch", "decide", "step"} <= names
+    body = ox.load_metrics(metrics)
+    assert body["run"] == f"one/{cell.cell_id}"
+    assert body["modeled_vs_measured"]["n_epochs"] == 2
+    assert body["metrics"]["counters"]["retrace.train"] >= 1
+    summary = ox.render_summary(obs_dir)
+    assert f"one/{cell.cell_id}" in summary
+    # and the tracer is torn down again: later cells run untraced
+    from repro import obs
+    assert not obs.enabled()
